@@ -1,0 +1,120 @@
+"""Shared benchmark infrastructure: sample generation, timing, result I/O,
+and the trained-LM fixture used by the paper's §4 (LLM) experiments."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributions as dist
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+RUNS_DIR = os.environ.get("REPRO_RUNS", "runs")
+
+# paper §C uses 2^24 samples; CPU container default is 2^18 (noted in
+# EXPERIMENTS.md — error estimates move by <1%)
+N_SAMPLES_FAST = 1 << 18
+N_SAMPLES_FULL = 1 << 22
+
+DISTS = {
+    "normal": dist.Normal(),
+    "laplace": dist.Laplace(),
+    "student_t5": dist.StudentT(nu=5.0),
+}
+
+
+def samples(d, n, seed=0):
+    return jnp.asarray(d.sample(np.random.default_rng(seed), (n,)))
+
+
+def write_rows(name: str, rows: list):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def timed(fn, *args, repeats=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return out, (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+# ---------------------------------------------------------------- LM fixture
+
+@lru_cache(maxsize=1)
+def trained_lm(steps: int = 150, seq: int = 128, batch: int = 8):
+    """Train (or load the cached) paper-100m-small reference model. Returns
+    (cfg, params, batch_fn, eval_batches)."""
+    from repro import configs
+    from repro.data.pipeline import make_batch_fn
+    from repro.train import AdamConfig, TrainConfig, train
+    from repro.train.checkpoint import latest_checkpoint, restore_checkpoint
+
+    cfg = configs.get_config("paper-100m", "small")
+    ckpt_dir = os.path.join(RUNS_DIR, "bench_lm")
+    batch_fn = make_batch_fn(cfg, seq=seq, batch=batch, seed=0)
+    tc = TrainConfig(steps=steps, lr=3e-3, warmup=10, log_every=50,
+                     ckpt_dir=ckpt_dir, ckpt_every=steps)
+    ac = AdamConfig()
+    ck = latest_checkpoint(ckpt_dir)
+    if ck is not None:
+        from repro.train.loop import init_state
+        template = init_state(jax.random.PRNGKey(0), cfg, ac)
+        state, _ = restore_checkpoint(ck, template=template)
+        print(f"[bench] loaded cached LM from {ck}")
+    else:
+        print(f"[bench] training reference LM ({steps} steps)…")
+        state, hist = train(cfg, tc, ac, batch_fn)
+        print(f"[bench] loss {hist[0]['loss']:.3f} → {hist[-1]['loss']:.3f}")
+    eval_batches = [batch_fn(10_000 + i) for i in range(4)]
+    return cfg, state["params"], batch_fn, eval_batches
+
+
+def lm_topk_kl(cfg, ref_params, test_params, eval_batches, k=128):
+    """Mean top-k KL divergence of test vs reference over the eval set."""
+    from repro.core.metrics import mean_topk_kl
+    from repro.models.api import get_family
+
+    fam = get_family(cfg.family)
+    apply_j = jax.jit(lambda p, b: fam.apply(p, b, cfg))
+    kls = []
+    for b in eval_batches:
+        b = jax.tree.map(jnp.asarray, b)
+        ref = apply_j(ref_params, b)
+        tst = apply_j(test_params, b)
+        kls.append(float(mean_topk_kl(ref, tst, k=min(k, cfg.vocab - 1))))
+    return float(np.mean(kls))
+
+
+@lru_cache(maxsize=1)
+def lm_fisher():
+    """Diagonal Fisher for the trained LM (cached)."""
+    from repro.core.fisher import estimate_diag_fisher, per_tensor_stats
+
+    cfg, params, batch_fn, _ = trained_lm()
+    fisher_path = os.path.join(RUNS_DIR, "bench_lm", "fisher.npz")
+    if os.path.exists(fisher_path):
+        npz = np.load(fisher_path)
+        from repro.train.checkpoint import _unflatten_dict
+        fisher = _unflatten_dict({k: npz[k] for k in npz.files})
+    else:
+        batches = (jax.tree.map(jnp.asarray, batch_fn(20_000 + i))
+                   for i in range(8))
+        fisher = estimate_diag_fisher(
+            lambda p, b: __import__("repro.models.api", fromlist=["x"])
+            .get_family(cfg.family).apply(p, b, cfg),
+            params, batches, jax.random.PRNGKey(42))
+        from repro.train.checkpoint import _flatten_dict
+        os.makedirs(os.path.dirname(fisher_path), exist_ok=True)
+        np.savez(fisher_path, **_flatten_dict(
+            jax.tree.map(np.asarray, fisher)))
+    stats = per_tensor_stats(params, fisher)
+    return fisher, stats

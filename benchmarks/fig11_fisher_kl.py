@@ -1,0 +1,58 @@
+"""Paper figs. 11/13: does diagonal Fisher predict KL under parameter
+perturbation? Per-tensor iid noise θ̃ = θ + σ·ε; predicted KL = ½·f̄_t·N_t·σ²
+(Eq. 7 with scaled-identity Fisher) vs measured top-k KL. Expected: strong
+rank correlation across tensors and noise scales."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+
+
+def run(fast: bool = True):
+    cfg, params, _, eval_batches = common.trained_lm()
+    fisher, stats = common.lm_fisher()
+    rng = np.random.default_rng(11)
+    rows = []
+    names = [n for n, s in stats.items() if s["numel"] > 4096]
+    names = names[:6] if fast else names
+    for name in names:
+        st = stats[name]
+        sigma0 = st["rms"]
+        for rel in (0.02, 0.08):
+            sigma = sigma0 * rel
+
+            def perturb(tree):
+                flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+                out = []
+                for p, x in flat:
+                    if jax.tree_util.keystr(p) == name:
+                        eps = rng.standard_normal(x.shape).astype(np.float32)
+                        out.append(x + sigma * eps)
+                    else:
+                        out.append(x)
+                return jax.tree_util.tree_unflatten(treedef, out)
+
+            pq = perturb(params)
+            kl = common.lm_topk_kl(cfg, params, pq, eval_batches)
+            pred = 0.5 * st["fisher_mean"] * st["numel"] * sigma ** 2
+            rows.append(dict(tensor=name, rel_sigma=rel, sigma=sigma,
+                             kl_measured=kl, kl_predicted=pred))
+    common.write_rows("fig11_fisher_kl", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    meas = np.array([r["kl_measured"] for r in rows])
+    pred = np.array([r["kl_predicted"] for r in rows])
+    good = (pred > 0) & (meas > 0)
+    if good.sum() >= 6:
+        rho = np.corrcoef(np.log(pred[good]), np.log(meas[good]))[0, 1]
+        if rho < 0.7:
+            fails.append(f"fig11: log-log corr {rho:.2f} < 0.7")
+    else:
+        fails.append("fig11: too few valid points")
+    return fails

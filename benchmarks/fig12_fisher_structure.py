@@ -1,0 +1,43 @@
+"""Paper fig. 12 analogue: variation of the diagonal Fisher *across* tensors
+vs *within* tensors — the justification for the scaled-identity per-tensor
+approximation (and hence Eq. 5 inter-tensor allocation)."""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common
+
+
+def run(fast: bool = True):
+    import jax
+    fisher, stats = common.lm_fisher()
+    rows = []
+    means = []
+    for (path, f) in jax.tree_util.tree_flatten_with_path(fisher)[0]:
+        name = jax.tree_util.keystr(path)
+        f = np.asarray(f, np.float64).reshape(-1)
+        if f.size < 1024:
+            continue
+        means.append(np.log10(max(f.mean(), 1e-30)))
+        rows.append(dict(tensor=name,
+                         log10_mean=float(np.log10(max(f.mean(), 1e-30))),
+                         within_std_log10=float(np.std(
+                             np.log10(np.maximum(f, 1e-30))))))
+    across = float(np.std(means))
+    rows.append(dict(tensor="__summary__", across_tensor_std_log10=across,
+                     mean_within_std_log10=float(np.mean(
+                         [r["within_std_log10"] for r in rows]))))
+    common.write_rows("fig12_fisher_structure", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    s = rows[-1]
+    # the paper's point: across-tensor variation is comparable to (or larger
+    # than) within-tensor variation — the mean Fisher per tensor is a
+    # meaningful allocation signal
+    if not s["across_tensor_std_log10"] > 0.25:
+        fails.append(f"fig12: across-tensor Fisher variation too small "
+                     f"({s['across_tensor_std_log10']:.2f} decades)")
+    return fails

@@ -1,0 +1,43 @@
+"""Paper fig. 19: floating-point EeMm element performance as total bits vary.
+Expected: the optimal exponent count is stable as total bits grow (exponent
+bits set the density *shape*, mantissa bits the resolution)."""
+from __future__ import annotations
+
+from repro.core import element as el
+from repro.core.scaling import Scaling
+from repro.core.tensor_format import TensorFormat
+
+from . import common
+
+
+def run(fast: bool = True):
+    n = common.N_SAMPLES_FAST if fast else common.N_SAMPLES_FULL
+    rows = []
+    s_blk = Scaling(granularity="block", statistic="absmax", block_size=64)
+    for dname, d in common.DISTS.items():
+        x = common.samples(d, n, seed=19)
+        for total in (4, 5, 6):
+            for e in (1, 2, 3):
+                m = total - 1 - e
+                if m < 0:
+                    continue
+                fmt = TensorFormat(el.fp_format(e, m), s_blk)
+                r = float(fmt.relative_rms_error(x))
+                rows.append(dict(dist=dname, total=total, e=e, m=m, R=r,
+                                 R2b=r * 2 ** total))
+    common.write_rows("fig19_fp_formats", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    for dname in common.DISTS:
+        best_e = {}
+        for total in (4, 5, 6):
+            sub = [r for r in rows if r["dist"] == dname
+                   and r["total"] == total]
+            best_e[total] = min(sub, key=lambda r: r["R"])["e"]
+        # optimal e stable within ±1 across total bits (fig 19)
+        if max(best_e.values()) - min(best_e.values()) > 1:
+            fails.append(f"fig19 {dname}: optimal e unstable {best_e}")
+    return fails

@@ -1,0 +1,83 @@
+"""Paper figs. 1/8: bits/param vs top-k KL trade-off on an LM, across the
+headline schemes (tensor-RMS fixed-length, block/channel absmax, sparse
+outliers, compression). Expected ordering (paper's central result): every
+near-optimal format is a variable-length code — compression ≤ {sparse,
+block/channel absmax} < fixed-length tensor formats.
+
+Offline adaptation: the LM is our own pretrained paper-100m-small (the
+public-checkpoint experiments do not transfer to an air-gapped container);
+the claim tested is the *ordering*, which is checkpoint-independent."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import build_plan, parse_format
+from repro.core.compress import fit_grid_delta
+from repro.core.element import uniform_grid
+from repro.core.plan import QuantisationPlan, quantisable, _flat_with_paths
+from repro.core.tensor_format import TensorFormat
+
+from . import common
+
+
+def grid_plan(params, target_bits: float) -> QuantisationPlan:
+    """Per-tensor uniform grid + compression at ~target entropy (§2.3)."""
+    formats = {}
+    for name, x in _flat_with_paths(params):
+        if not quantisable(name, x):
+            formats[name] = None
+            continue
+        delta = fit_grid_delta(np.asarray(x), target_bits=target_bits)
+        formats[name] = TensorFormat(
+            element=uniform_grid(delta),
+            scaling=parse_format("trms:n4").scaling.__class__(
+                granularity="none", statistic="rms", scale_format="exact"),
+            compressed=True, name=f"grid+C@{target_bits}")
+    return QuantisationPlan(formats)
+
+
+SCHEMES = {
+    "tensor_rms": "trms:t{b}nu5",
+    "tensor_rms_sparse": "trms:t{b}nu5:sp0.001",
+    "tensor_absmax": "tabsmax:t{b}nu5",
+    "channel_absmax": "cabsmax:t{b}nu5",
+    "block_absmax": "babsmax128:t{b}nu5",
+    "block_signmax": "bsignmax128:t{b}nu5",
+}
+
+
+def run(fast: bool = True):
+    cfg, params, _, eval_batches = common.trained_lm()
+    rows = []
+    for b in (3, 4, 5):
+        for name, spec_t in SCHEMES.items():
+            plan = build_plan(params, spec_t.format(b=b))
+            pq = plan.fake_quant(params)
+            kl = common.lm_topk_kl(cfg, params, pq, eval_batches)
+            bits = plan.bits_per_param(params)
+            rows.append(dict(scheme=name, b=b, bits=bits, topk_kl=kl,
+                             rho=kl * 2 ** (2 * bits)))
+        plan = grid_plan(params, float(b))
+        pq = plan.fake_quant(params)
+        kl = common.lm_topk_kl(cfg, params, pq, eval_batches)
+        bits = plan.bits_per_param(params, measured=True)
+        rows.append(dict(scheme="grid_compressed", b=b, bits=bits,
+                         topk_kl=kl, rho=kl * 2 ** (2 * bits)))
+    common.write_rows("fig1_llm_tradeoff", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    for b in (3, 4):
+        sub = {r["scheme"]: r for r in rows if r["b"] == b}
+        vl_best = min(sub["grid_compressed"]["rho"],
+                      sub["block_absmax"]["rho"],
+                      sub["tensor_rms_sparse"]["rho"],
+                      sub["channel_absmax"]["rho"])
+        # variable-length schemes beat the fixed-length tensor formats
+        if not vl_best < sub["tensor_rms"]["rho"]:
+            fails.append(f"fig1 b={b}: no VL scheme beats tensor RMS")
+        if not vl_best < sub["tensor_absmax"]["rho"]:
+            fails.append(f"fig1 b={b}: no VL scheme beats tensor absmax")
+    return fails

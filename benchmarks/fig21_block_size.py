@@ -1,0 +1,56 @@
+"""Paper figs. 20/21: block size and scale-format sweeps at ~constant total
+bits. Expected: optimum near B=128; bfloat16 scale beats E8M0; 4–10 scale
+mantissa bits recover most of the gap."""
+from __future__ import annotations
+
+import math
+
+from repro.core import element as el
+from repro.core.scaling import Scaling, scale_format_bits
+from repro.core.tensor_format import TensorFormat
+
+from . import common
+
+BLOCKS = (16, 32, 64, 128, 256, 512)
+SCALE_FMTS = ("bf16", "e8m0", "e8m3", "e8m6")
+
+
+def run(fast: bool = True):
+    n = common.N_SAMPLES_FAST if fast else common.N_SAMPLES_FULL
+    rows = []
+    target_total = 4.0
+    for dname, d in common.DISTS.items():
+        x = common.samples(d, n, seed=21)
+        for B in BLOCKS:
+            for sf in SCALE_FMTS:
+                sbits = scale_format_bits(sf)
+                eb = target_total - sbits / B
+                if eb < 2:
+                    continue
+                elem = el.cube_root_absmax(d, eb, B)
+                fmt = TensorFormat(elem, Scaling(
+                    granularity="block", statistic="absmax", block_size=B,
+                    scale_format=sf))
+                r = float(fmt.relative_rms_error(x))
+                bits = fmt.bits_per_param(x.shape)
+                rows.append(dict(dist=dname, B=B, scale_fmt=sf,
+                                 elem_bits=round(eb, 3), R=r, bits=bits,
+                                 R2b=r * 2 ** bits))
+    common.write_rows("fig21_block_size", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    for dname in common.DISTS:
+        sub = [r for r in rows if r["dist"] == dname
+               and r["scale_fmt"] == "bf16"]
+        best = min(sub, key=lambda r: r["R2b"])
+        if best["B"] not in (64, 128, 256):
+            fails.append(f"fig21 {dname}: best B={best['B']} (expect 64–256)")
+        # bf16 scale beats E8M0 at B=128 (fig 21)
+        b128 = {r["scale_fmt"]: r for r in rows
+                if r["dist"] == dname and r["B"] == 128}
+        if not b128["bf16"]["R2b"] < b128["e8m0"]["R2b"]:
+            fails.append(f"fig21 {dname}: bf16 !< e8m0 at B=128")
+    return fails

@@ -1,0 +1,67 @@
+"""Paper fig. 22 (and fig. 16): validation of the cube-root rule. Quantisers
+with codepoint density ∝ pdf^α, α swept — α=1/3 should win for fixed-length
+codes and match Lloyd-Max; with compression the optimum moves to α=0
+(uniform grid)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import distributions as dist
+from repro.core.element import power_rule_rms, power_rule_absmax
+from repro.core.lloyd import lloyd_max
+from repro.core.scaling import Scaling
+from repro.core.tensor_format import TensorFormat
+
+from . import common
+
+ALPHAS = (0.1, 0.2, 1.0 / 3.0, 0.5, 0.75, 1.0)
+
+
+def run(fast: bool = True):
+    n = common.N_SAMPLES_FAST if fast else common.N_SAMPLES_FULL
+    rows = []
+    rms_scaling = Scaling(granularity="tensor", statistic="rms",
+                          scale_format="exact")
+    blk_scaling = Scaling(granularity="block", statistic="absmax",
+                          block_size=64, scale_format="bf16")
+    for dname, d in common.DISTS.items():
+        x = common.samples(d, n, seed=11)
+        for alpha in ALPHAS:
+            try:  # small α can push Student-t ν' below validity — skip
+                f = TensorFormat(power_rule_rms(d, 4, alpha), rms_scaling)
+                rows.append(dict(dist=dname, scaling="rms", alpha=alpha,
+                                 R=float(f.relative_rms_error(x))))
+                f = TensorFormat(power_rule_absmax(d, 4, 64, alpha),
+                                 blk_scaling)
+                rows.append(dict(dist=dname, scaling="absmax64", alpha=alpha,
+                                 R=float(f.relative_rms_error(x))))
+            except ValueError:
+                continue
+        # Lloyd-Max trained on matching samples (the empirical optimum)
+        lm = lloyd_max(np.asarray(x), 4, seed=1)
+        f = TensorFormat(lm, rms_scaling)
+        rows.append(dict(dist=dname, scaling="rms", alpha=-1.0,
+                         R=float(f.relative_rms_error(x))))
+    common.write_rows("fig22_alpha_rule", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    for dname in common.DISTS:
+        for scaling in ("rms", "absmax64"):
+            sub = [r for r in rows if r["dist"] == dname
+                   and r["scaling"] == scaling and r["alpha"] > 0]
+            best = min(sub, key=lambda r: r["R"])
+            if abs(best["alpha"] - 1 / 3) > 1e-6:
+                fails.append(f"fig22 {dname}/{scaling}: best α={best['alpha']}"
+                             f" (expect 1/3)")
+        # ∛p ≈ Lloyd-Max within 3% (paper fig. 16)
+        cbrt = next(r for r in rows if r["dist"] == dname
+                    and r["scaling"] == "rms"
+                    and abs(r["alpha"] - 1 / 3) < 1e-6)
+        lm = next(r for r in rows if r["dist"] == dname and r["alpha"] < 0)
+        if not cbrt["R"] < lm["R"] * 1.03:
+            fails.append(f"fig22 {dname}: ∛p R={cbrt['R']:.4f} vs "
+                         f"Lloyd {lm['R']:.4f}")
+    return fails

@@ -1,0 +1,51 @@
+"""Paper fig. 24: practical compressors vs the Shannon limit. Expected:
+per-element Huffman within a few % of optimal; both beat the uncompressed
+block format at equal error."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import parse_format
+from repro.core.compress import (build_huffman, code_histogram,
+                                 entropy_bits, fit_grid_delta)
+from repro.core.element import uniform_grid
+from repro.core.tensor_format import TensorFormat
+
+from . import common
+
+
+def run(fast: bool = True):
+    n = (1 << 18) if fast else (1 << 20)
+    rows = []
+    for dname, d in common.DISTS.items():
+        x = common.samples(d, n, seed=24)
+        # ∛p element codes + entropy coding (paper's fig-24 setting)
+        fmt = parse_format("trms:t6nu5" if dname == "student_t5"
+                           else f"trms:{dname[0]}6")
+        qt = fmt.quantise(x)
+        hist = code_histogram(np.asarray(qt.codes), fmt.element.n)
+        shannon = entropy_bits(hist)
+        huff = build_huffman(hist).mean_bits(hist)
+        r = float(fmt.relative_rms_error(x))
+        rows.append(dict(dist=dname, R=r, shannon_bits=shannon,
+                         huffman_bits=huff,
+                         huffman_overhead=huff / shannon - 1.0))
+        # uncompressed block format at ~equal R for comparison
+        bfmt = parse_format("babsmax128:t5nu5" if dname == "student_t5"
+                            else f"babsmax128:{dname[0]}5")
+        rows.append(dict(dist=dname, R=float(bfmt.relative_rms_error(x)),
+                         shannon_bits=None,
+                         huffman_bits=bfmt.bits_per_param(x.shape),
+                         huffman_overhead=None, scheme="block_uncompressed"))
+    common.write_rows("fig24_huffman", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    for r in rows:
+        if r.get("huffman_overhead") is not None:
+            if r["huffman_overhead"] > 0.05:
+                fails.append(f"fig24 {r['dist']}: huffman "
+                             f"{r['huffman_overhead']:.1%} over Shannon")
+    return fails

@@ -1,0 +1,56 @@
+"""Paper fig. 28: with lossless compression there is NO benefit to block
+scaling or sparse outliers — their benefit comes from the same
+variable-length-coding source compression provides explicitly."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import distributions as dist
+from repro.core import parse_format
+from repro.core.compress import code_histogram, entropy_bits
+
+from . import common
+
+
+def _entropy_coded_bits(fmt, x):
+    qt = fmt.quantise(x)
+    n = fmt.element.n
+    return (entropy_bits(code_histogram(np.asarray(qt.codes), n))
+            + fmt.scaling.scale_bits_per_param(x.shape)
+            + (fmt.sparse.bits_per_param() if fmt.sparse else 0.0))
+
+
+def run(fast: bool = True):
+    n = common.N_SAMPLES_FAST if fast else common.N_SAMPLES_FULL
+    rows = []
+    for dname, d in common.DISTS.items():
+        x = common.samples(d, n, seed=28)
+        elem = {"normal": "n5", "laplace": "l5", "student_t5": "t5nu5"}[dname]
+        for scheme, spec in {
+            "tensor_rms": f"trms:{elem}",
+            "block_absmax": f"babsmax128:{elem}",
+            "tensor_rms_sparse": f"trms:{elem}:sp0.001",
+        }.items():
+            fmt = parse_format(spec)
+            r = float(fmt.relative_rms_error(x))
+            bits = _entropy_coded_bits(fmt, x)
+            rows.append(dict(dist=dname, scheme=scheme, R=r,
+                             bits_compressed=bits,
+                             rho=r * r * 2 ** (2 * bits)))
+    common.write_rows("fig28_compression_scaling", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    for dname in common.DISTS:
+        sub = {r["scheme"]: r for r in rows if r["dist"] == dname}
+        # under compression, block absmax must NOT materially beat tensor
+        # RMS (paper: "no benefit to block scaling with compression")
+        if sub["block_absmax"]["rho"] < sub["tensor_rms"]["rho"] * 0.85:
+            fails.append(f"fig28 {dname}: block still wins under compression"
+                         f" ({sub['block_absmax']['rho']:.3f} vs "
+                         f"{sub['tensor_rms']['rho']:.3f})")
+        if sub["tensor_rms_sparse"]["rho"] < sub["tensor_rms"]["rho"] * 0.85:
+            fails.append(f"fig28 {dname}: sparse still wins under compression")
+    return fails

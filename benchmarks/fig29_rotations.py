@@ -1,0 +1,56 @@
+"""Paper fig. 29: random rotations help fixed-length tensor-scaled formats
+(they gaussianise heavy tails) but are unnecessary for variable-length
+schemes (block absmax / sparse / compression)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributions as dist
+from repro.core import parse_format
+from repro.core.rotations import rotated_fake_quant
+
+from . import common
+
+
+def _r_of(fmt, x, rotate: bool):
+    x32 = jnp.asarray(x, jnp.float32)
+    y = rotated_fake_quant(x32, fmt, seed=3) if rotate else fmt.fake_quant(x32)
+    err = y - x32
+    return float(jnp.sqrt(jnp.sum(err * err) / jnp.sum(x32 * x32)))
+
+
+def run(fast: bool = True):
+    # heavy-tailed 2-D "weight matrix"
+    n = 512
+    x = dist.StudentT(nu=4.0).sample(np.random.default_rng(29), (n, n))
+    rows = []
+    for scheme, spec in {
+        "tensor_rms": "trms:n4",            # fixed-length, Normal quantiser
+        "block_absmax": "babsmax128:n4",
+        "tensor_rms_sparse": "trms:n4:sp0.005",
+    }.items():
+        fmt = parse_format(spec)
+        rows.append(dict(scheme=scheme,
+                         R_plain=_r_of(fmt, x, False),
+                         R_rotated=_r_of(fmt, x, True)))
+    common.write_rows("fig29_rotations", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    by = {r["scheme"]: r for r in rows}
+    # rotations materially help the fixed-length tensor format...
+    t = by["tensor_rms"]
+    if not t["R_rotated"] < t["R_plain"] * 0.95:
+        fails.append(f"fig29: rotation doesn't help tensor RMS "
+                     f"({t['R_plain']:.4f}→{t['R_rotated']:.4f})")
+    # ...and matter much less for the variable-length schemes
+    for s in ("block_absmax", "tensor_rms_sparse"):
+        r = by[s]
+        gain_vl = r["R_plain"] / max(r["R_rotated"], 1e-9)
+        gain_fx = t["R_plain"] / max(t["R_rotated"], 1e-9)
+        if gain_vl > gain_fx:
+            fails.append(f"fig29: rotation helps {s} more than tensor RMS")
+    return fails

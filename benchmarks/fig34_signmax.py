@@ -1,0 +1,54 @@
+"""Paper fig. 34: signmax vs absmax vs symmetric scaling variants for block
+formats. Expected: signmax delivers a consistent improvement, especially at
+small b≈3."""
+from __future__ import annotations
+
+from repro.core import distributions as dist
+from repro.core import element as el
+from repro.core.scaling import Scaling
+from repro.core.tensor_format import TensorFormat
+
+from . import common
+
+
+def run(fast: bool = True):
+    n = common.N_SAMPLES_FAST if fast else common.N_SAMPLES_FULL
+    rows = []
+    B = 128
+    for dname, d in common.DISTS.items():
+        x = common.samples(d, n, seed=34)
+        for b in (3, 4):
+            variants = {
+                "absmax_sym": TensorFormat(
+                    el.cube_root_absmax(d, b, B, symmetric=True),
+                    Scaling("block", "absmax", B)),
+                "absmax_asym": TensorFormat(
+                    el.cube_root_absmax(d, b, B, symmetric=False),
+                    Scaling("block", "absmax", B)),
+                "signmax": TensorFormat(
+                    el.cube_root_signmax(d, b, B),
+                    Scaling("block", "signmax", B)),
+            }
+            for name, fmt in variants.items():
+                r = float(fmt.relative_rms_error(x))
+                bits = fmt.bits_per_param(x.shape)
+                rows.append(dict(dist=dname, b=b, variant=name, R=r,
+                                 bits=bits, R2b=r * 2 ** bits))
+    common.write_rows("fig34_signmax", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    wins = 0
+    total = 0
+    for dname in common.DISTS:
+        for b in (3, 4):
+            sub = {r["variant"]: r for r in rows
+                   if r["dist"] == dname and r["b"] == b}
+            total += 1
+            if sub["signmax"]["R2b"] < sub["absmax_asym"]["R2b"] * 1.001:
+                wins += 1
+    if wins < total - 1:   # "consistent improvement" (allow one tie-ish case)
+        fails.append(f"fig34: signmax wins only {wins}/{total}")
+    return fails

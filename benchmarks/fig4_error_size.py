@@ -1,0 +1,70 @@
+"""Paper fig. 4: error/size trade-off for optimal quantisers across data
+distributions and scaling schemes, with and without lossless compression.
+
+Expected reproduction: block absmax beats tensor RMS for iid data WITHOUT
+compression; WITH compression the ordering reverses (block scaling's benefit
+is variable-length coding, which explicit compression supersedes)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import parse_format
+from repro.core.compress import fit_grid_delta
+from repro.core.element import uniform_grid
+from repro.core.tensor_format import TensorFormat
+
+from . import common
+
+
+def run(fast: bool = True):
+    n = common.N_SAMPLES_FAST if fast else common.N_SAMPLES_FULL
+    rows = []
+    for dname, d in common.DISTS.items():
+        x = common.samples(d, n, seed=hash(dname) % 997)
+        elem = {"normal": "n", "laplace": "l", "student_t5": "t4nu5"}[dname]
+        tag = elem if elem.startswith("t") else elem + "4"
+        for b in (3, 4, 5):
+            e = tag.replace("4", str(b)) if not tag.startswith("t") \
+                else f"t{b}nu5"
+            schemes = {
+                f"tensor_rms": f"trms:{e}",
+                f"block_absmax128": f"babsmax128:{e}",
+            }
+            for sname, spec in schemes.items():
+                fmt = parse_format(spec)
+                r = float(fmt.relative_rms_error(x))
+                bits = fmt.bits_per_param(x.shape)
+                rows.append(dict(dist=dname, scheme=sname, b=b, R=r,
+                                 bits=bits, R2b=r * 2 ** bits))
+            # compressed uniform grid at matched entropy (the §2.3 optimum)
+            delta = fit_grid_delta(np.asarray(x), target_bits=float(b))
+            gfmt = TensorFormat(element=uniform_grid(delta),
+                                scaling=parse_format("trms:n4").scaling,
+                                compressed=True, name=f"grid+C@{b}b")
+            r = float(gfmt.relative_rms_error(x))
+            bits = gfmt.measured_bits_per_param(x)
+            rows.append(dict(dist=dname, scheme="grid_compressed", b=b, R=r,
+                             bits=bits, R2b=r * 2 ** bits))
+    common.write_rows("fig4_error_size", rows)
+    return rows
+
+
+def check(rows) -> list:
+    """Paper-claim assertions; returns list of failures."""
+    fails = []
+    for dname in common.DISTS:
+        for b in (3, 4):
+            get = lambda s: next(r for r in rows if r["dist"] == dname
+                                 and r["scheme"] == s and r["b"] == b)
+            blk, trms = get("block_absmax128"), get("tensor_rms")
+            grid = get("grid_compressed")
+            # compression dominates both fixed-length schemes (R·2^b)
+            if not grid["R2b"] < min(blk["R2b"], trms["R2b"]):
+                fails.append(f"fig4 {dname} b={b}: compression not best")
+    # heavy tails: block absmax must beat tensor RMS uncompressed
+    for b in (3, 4):
+        get = lambda s: next(r for r in rows if r["dist"] == "student_t5"
+                             and r["scheme"] == s and r["b"] == b)
+        if not get("block_absmax128")["R2b"] < get("tensor_rms")["R2b"]:
+            fails.append(f"fig4 student_t5 b={b}: block !< tensor")
+    return fails

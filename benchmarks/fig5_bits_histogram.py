@@ -1,0 +1,62 @@
+"""Paper fig. 5 analogue: how the three variable-length mechanisms spend
+bits per parameter on a real weight tensor — sparse outliers (a bf16 step
+for the top 0.1 %), block absmax (scale bits amortised per block), and
+compression (β_i = −log2 p_i). Emits summary statistics rather than the 2-D
+histogram (no display in this container)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import parse_format
+from repro.core.compress import code_histogram, fit_grid_delta
+from repro.core.element import uniform_grid
+
+from . import common
+
+
+def run(fast: bool = True):
+    cfg, params, _, _ = common.trained_lm()
+    # first MLP down-projection, as in the paper's fig. 5
+    w = np.asarray(params["layers"]["w_down"][0], np.float32)
+    rows = []
+
+    # (a) sparse outliers: 0.1% get 16 + 32/numel index bits extra
+    fmt = parse_format("trms:t4nu5:sp0.001")
+    frac = 0.001
+    rows.append(dict(scheme="sparse", base_bits=4.0,
+                     outlier_bits=16 + 32.0,
+                     frac_outliers=frac,
+                     mean_bits=fmt.bits_per_param(w.shape)))
+
+    # (b) block absmax: every element pays scale/B extra
+    fmt = parse_format("babsmax128:t4nu5")
+    rows.append(dict(scheme="block_absmax", base_bits=4.0,
+                     scale_bits_per_elem=16 / 128,
+                     mean_bits=fmt.bits_per_param(w.shape)))
+
+    # (c) compression: β_i = −log2 p_i varies per element
+    delta = fit_grid_delta(w, target_bits=4.0)
+    codes = np.asarray(uniform_grid(delta).quantise(w)).reshape(-1)
+    hist = code_histogram(codes)
+    p = hist / hist.sum()
+    beta = -np.log2(np.maximum(p, 1e-12))
+    elem_beta = beta[codes - codes.min()]
+    rows.append(dict(scheme="compressed",
+                     mean_bits=float(elem_beta.mean()),
+                     p10_bits=float(np.percentile(elem_beta, 10)),
+                     p99_bits=float(np.percentile(elem_beta, 99)),
+                     max_bits=float(elem_beta.max())))
+    common.write_rows("fig5_bits_histogram", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    comp = next(r for r in rows if r["scheme"] == "compressed")
+    # variable-length: rare (large) values must cost many more bits than
+    # common (small) ones — the paper's fig-5 mechanism
+    if not comp["p99_bits"] > comp["p10_bits"] + 2.0:
+        fails.append("fig5: compressed code lengths not meaningfully variable")
+    if not 3.0 < comp["mean_bits"] < 5.0:
+        fails.append(f"fig5: mean bits {comp['mean_bits']:.2f} off target 4")
+    return fails

@@ -1,0 +1,110 @@
+"""Roofline analysis (deliverable g): per (arch × shape × mesh) derive the
+three roofline terms from the compiled dry-run artifacts:
+
+    compute    = HLO_dot_FLOPs/dev ÷ 197 TFLOP/s (bf16, TPU v5e)
+    memory     = HLO_bytes/dev     ÷ 819 GB/s HBM
+    collective = coll_bytes/dev    ÷ 50 GB/s/link ICI
+
+plus MODEL_FLOPS/HLO_FLOPs (useful-compute fraction; catches remat and
+dispatch waste) and the dominant bottleneck. Reads results/dryrun/*.json
+(produced by repro.launch.dryrun); writes a markdown table + json.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s/link
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "results/dryrun")
+
+
+def load_cells(mesh_tag: str = "pod256"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh_tag,
+                                              "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def terms(cell: dict) -> dict:
+    n_dev = cell["n_devices"]
+    t_comp = cell["hlo_dot_flops_per_device"] / PEAK_FLOPS
+    # memory term: dot-level traffic (TPU-realistic — matmul operands and
+    # results stream HBM⇄VMEM; elementwise fuses); the fusion-level figure
+    # from the CPU backend is kept as an upper bound.
+    t_mem = cell.get("hlo_dot_bytes_per_device",
+                     cell["hlo_bytes_per_device"]) / HBM_BW
+    t_mem_upper = cell["hlo_bytes_per_device"] / HBM_BW
+    t_coll = cell["collective_bytes_per_device"].get("total", 0.0) / ICI_BW
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    total_hlo_flops = cell["hlo_dot_flops_per_device"] * n_dev
+    useful = (cell["model_flops_total"] / total_hlo_flops
+              if total_hlo_flops else float("nan"))
+    # roofline fraction: useful FLOPs vs what the dominant term's time
+    # would allow at peak compute
+    t_bound = max(t_comp, t_mem, t_coll)
+    step_flops_at_peak = t_bound * PEAK_FLOPS * n_dev
+    frac = (cell["model_flops_total"] / step_flops_at_peak
+            if step_flops_at_peak else float("nan"))
+    return dict(
+        arch=cell["arch"], shape=cell["shape"],
+        t_compute_s=t_comp, t_memory_s=t_mem, t_memory_upper_s=t_mem_upper,
+        t_collective_s=t_coll,
+        dominant=dominant, useful_flops_ratio=useful,
+        roofline_fraction=frac,
+        mem_per_dev_gib=(cell["memory"]["argument_bytes"]
+                         + cell["memory"]["temp_bytes"]) / 2**30,
+    )
+
+
+def run(fast: bool = True, mesh_tag: str = "pod256"):
+    rows = []
+    for cell in load_cells(mesh_tag):
+        if cell.get("status") == "ok":
+            rows.append(terms(cell))
+        elif cell.get("status") == "skipped":
+            rows.append(dict(arch=cell["arch"], shape=cell["shape"],
+                             dominant="skipped",
+                             note=cell["reason"][:60]))
+    os.makedirs("results/bench", exist_ok=True)
+    with open(f"results/bench/roofline_{mesh_tag}.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s (upper) | collective s | "
+           "dominant | useful/HLO | roofline frac | mem GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r["dominant"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} ({r.get('t_memory_upper_s', 0):.3g}) | "
+            f"{r['t_collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['mem_per_dev_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def check(rows):
+    ok = [r for r in rows if r["dominant"] != "skipped"]
+    fails = []
+    if len(ok) < 30:
+        fails.append(f"roofline: only {len(ok)} ok cells")
+    return fails
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown_table(rows))

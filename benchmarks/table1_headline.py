@@ -1,0 +1,50 @@
+"""Paper Table 1: headline formats at b≈3, direct-cast, ranked by KL.
+Expected ranking (paper): compression < sparse < channel absmax < block
+absmax < tensor absmax < tensor RMS. We assert the coarse structure:
+compression best, plain tensor RMS worst."""
+from __future__ import annotations
+
+from repro.core import build_plan
+
+from . import common
+from .fig1_llm_tradeoff import grid_plan
+
+FORMATS = {
+    "tensor_rms_compressed": None,  # grid+C
+    "tensor_rms_sparse": "trms:t3nu5:sp0.001",
+    "channel_absmax": "cabsmax:t3nu5",
+    "block_absmax": "babsmax128:t3nu5",
+    "tensor_absmax": "tabsmax:t3nu5",
+    "tensor_rms": "trms:t3nu5",
+}
+
+
+def run(fast: bool = True):
+    cfg, params, _, eval_batches = common.trained_lm()
+    rows = []
+    for name, spec in FORMATS.items():
+        plan = grid_plan(params, 3.0) if spec is None \
+            else build_plan(params, spec)
+        pq = plan.fake_quant(params)
+        kl = common.lm_topk_kl(cfg, params, pq, eval_batches)
+        bits = plan.bits_per_param(params, measured=spec is None)
+        rows.append(dict(format=name, bits=bits, topk_kl=kl))
+    rows.sort(key=lambda r: r["topk_kl"])
+    common.write_rows("table1_headline", rows)
+    return rows
+
+
+def check(rows):
+    fails = []
+    order = [r["format"] for r in rows]
+    kl = {r["format"]: r["topk_kl"] for r in rows}
+    if order[-1] not in ("tensor_rms", "tensor_absmax"):
+        fails.append(f"table1: worst format is {order[-1]}, expected a "
+                     "fixed-length tensor format")
+    if not kl["tensor_rms_compressed"] < kl["tensor_rms"]:
+        fails.append("table1: compression !< tensor RMS")
+    if not kl["tensor_rms_sparse"] < kl["tensor_rms"]:
+        fails.append("table1: sparse !< tensor RMS")
+    if not kl["block_absmax"] < kl["tensor_rms"]:
+        fails.append("table1: block absmax !< tensor RMS")
+    return fails

@@ -1,0 +1,48 @@
+"""Quickstart: design an optimal format with the paper's machinery and
+quantise a model with it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import build_plan, parse_format
+from repro.core import distributions as dist
+from repro.core.element import cube_root_absmax
+from repro.models.api import get_family
+
+# --- 1. element formats from the cube-root rule (§2.1) ---------------------
+fmt = parse_format("babsmax128:t4")          # block-128 absmax ∛p Student-t
+x = jnp.asarray(np.random.default_rng(0).standard_normal(1 << 16), jnp.float32)
+print(f"format {fmt.describe():24s} bits/param={fmt.bits_per_param(x.shape):.3f}"
+      f"  R={float(fmt.relative_rms_error(x)):.4f}")
+
+# compare against a fixed-length tensor format — the paper's headline gap
+for spec in ["trms:t4", "trms:t4:sp0.001", "bsignmax128:t4"]:
+    f = parse_format(spec)
+    print(f"format {f.describe():24s} bits/param={f.bits_per_param(x.shape):.3f}"
+          f"  R={float(f.relative_rms_error(x)):.4f}")
+
+# --- 2. quantise a whole model with a per-tensor plan -----------------------
+cfg = configs.get_config("paper-100m", "smoke")
+fam = get_family(cfg.family)
+params = fam.init(jax.random.PRNGKey(0), cfg)
+plan = build_plan(params, "babsmax128:int4",
+                  overrides={"embed": "babsmax128:int8"})  # 8-bit embeddings
+print(f"\nmodel bits/param: {plan.bits_per_param(params):.3f} "
+      f"(int4 weights, int8 embeddings, norms kept bf16)")
+
+# --- 3. direct-cast and packed round trips ----------------------------------
+pq = plan.fake_quant(params)          # direct-cast (round-to-nearest)
+packed = plan.quantise(params)        # packed codes + scales (checkpoint)
+restored = plan.dequantise(packed)
+err = max(float(jnp.max(jnp.abs(a - b)))
+          for a, b in zip(jax.tree.leaves(pq), jax.tree.leaves(restored)))
+print(f"packed round-trip max |Δ| vs fake-quant: {err:.2e}")
+
+# --- 4. codebooks are plain arrays — inspect one ----------------------------
+cb = cube_root_absmax(dist.StudentT(nu=7.0), 4, 128)
+print(f"\n∛p Student-t absmax codebook (16 pts): "
+      f"{np.round(cb.np_codepoints(), 3)}")

@@ -1,0 +1,111 @@
+"""End-to-end driver: pretrain a small LM → estimate Fisher → build an
+Eq.-5 bit-allocated quantisation plan → direct-cast + QAT → serve the
+quantised model with the batched engine. This is the paper's full §4
+pipeline on infrastructure that would scale to the production mesh.
+
+    PYTHONPATH=src python examples/train_quantise_serve.py [--steps 150]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import build_plan, build_allocated_plan
+from repro.core.allocation import allocate_bits, average_bits
+from repro.core.fisher import estimate_diag_fisher, per_tensor_stats
+from repro.core.metrics import mean_topk_kl
+from repro.data.pipeline import make_batch_fn
+from repro.models.api import get_family
+from repro.serve.engine import Request, ServeEngine
+from repro.train import AdamConfig, TrainConfig, train
+from repro.train.loop import make_train_step
+from repro.train.optimizer import adam_init
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=150)
+ap.add_argument("--qat-steps", type=int, default=40)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--batch", type=int, default=8)
+args = ap.parse_args()
+
+cfg = configs.get_config("paper-100m", "small")
+fam = get_family(cfg.family)
+batch_fn = make_batch_fn(cfg, seq=args.seq, batch=args.batch, seed=0)
+
+# --- 1. pretrain -------------------------------------------------------------
+print(f"=== pretraining {cfg.name} for {args.steps} steps ===")
+tc = TrainConfig(steps=args.steps, lr=3e-3, warmup=10, log_every=25)
+ac = AdamConfig()
+state, hist = train(cfg, tc, ac, batch_fn,
+                    on_step=lambda m: print(f"  step {m['step']:4d} "
+                                            f"loss {m['loss']:.3f}"))
+ref = state["params"]
+print(f"loss: {hist[0]['loss']:.3f} → {hist[-1]['loss']:.3f}")
+
+# --- 2. Fisher + bit allocation (Eq. 5) -------------------------------------
+print("\n=== estimating diagonal Fisher (Eq. 8) ===")
+fisher = estimate_diag_fisher(
+    lambda p, b: fam.apply(p, b, cfg), ref,
+    (jax.tree.map(jnp.asarray, batch_fn(5000 + i)) for i in range(4)),
+    jax.random.PRNGKey(1))
+stats = per_tensor_stats(ref, fisher)
+from repro.core.plan import quantisable, _flat_with_paths
+qstats = {n: s for n, s in stats.items()
+          if quantisable(n, dict(_flat_with_paths(ref))[n])}
+alloc = allocate_bits(qstats, target_bits=4.0, b_min=2.0, b_max=8.0)
+print(f"allocated avg bits: {average_bits(alloc, qstats):.3f} "
+      f"(spread {min(alloc.values()):.1f}–{max(alloc.values()):.1f})")
+
+# --- 3. direct-cast: flat vs allocated --------------------------------------
+eval_batches = [jax.tree.map(jnp.asarray, batch_fn(9000 + i))
+                for i in range(2)]
+apply_j = jax.jit(lambda p, b: fam.apply(p, b, cfg))
+
+
+def kl_of(params_q):
+    return float(np.mean([
+        float(mean_topk_kl(apply_j(ref, b), apply_j(params_q, b), k=128))
+        for b in eval_batches]))
+
+
+flat_plan = build_plan(ref, "babsmax128:t4")
+var_plan = build_allocated_plan(ref, alloc, "babsmax128")
+kl_flat, kl_var = kl_of(flat_plan.fake_quant(ref)), kl_of(var_plan.fake_quant(ref))
+print(f"\n=== direct-cast top-k KL @4b ===\n"
+      f"  flat  babsmax128:t4 : {kl_flat:.5f}\n"
+      f"  Eq.5  allocated     : {kl_var:.5f}")
+
+# --- 4. QAT (STE + full-KL distillation, §D) --------------------------------
+# QAT pays off where direct-cast bites: use an aggressive 3-bit format
+qat_plan = build_plan(ref, "babsmax128:int3")
+kl_dc3 = kl_of(qat_plan.fake_quant(ref))
+print(f"\n=== QAT (babsmax128:int3) for {args.qat_steps} steps ===")
+qat_lr = 3e-4
+step = make_train_step(cfg, ac, TrainConfig(steps=args.qat_steps, lr=qat_lr),
+                       lambda s: qat_lr, qat_plan=qat_plan, distill=True)
+st = {"params": jax.tree.map(lambda x: x, ref), "opt": adam_init(ref, ac)}
+jit_step = jax.jit(step)
+for i in range(args.qat_steps):
+    st, m = jit_step(st, jax.tree.map(jnp.asarray, batch_fn(7000 + i)), ref)
+    if i % 10 == 0:
+        print(f"  qat step {i:3d} KL-to-teacher {float(m['loss']):.5f}")
+kl_qat = kl_of(qat_plan.fake_quant(st["params"]))
+print(f"int3 direct-cast KL {kl_dc3:.5f} → after QAT {kl_qat:.5f}")
+
+# --- 5. serve the quantised model --------------------------------------------
+print("\n=== serving the quantised model ===")
+qparams = flat_plan.quantise(st["params"])
+eng = ServeEngine.from_quantised(cfg, qparams, flat_plan, batch_slots=2,
+                                 kv_len=64)
+rng = np.random.default_rng(0)
+for rid in range(4):
+    eng.submit(Request(prompt=rng.integers(0, cfg.vocab, 4).tolist(),
+                       max_new_tokens=8, rid=rid))
+done = eng.run()
+for g in done:
+    print(f"  rid={g.rid}: {g.tokens}")
+print(f"\nbits/param served: {flat_plan.bits_per_param(ref):.3f} "
+      f"(vs 16.0 bf16) — ~{16/flat_plan.bits_per_param(ref):.1f}x weight-"
+      f"stream reduction at decode")

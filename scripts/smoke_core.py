@@ -1,0 +1,56 @@
+"""Fast dev smoke of repro.core — not a test; run during bring-up."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import distributions as dist, element as el
+from repro.core import parse_format
+from repro.core.compress import build_huffman, code_histogram, entropy_bits
+from repro.core.lloyd import lloyd_max
+
+rng = np.random.default_rng(0)
+x = rng.standard_normal(1 << 16).astype(np.float32)
+
+# 1. distributions / Table 4
+n = dist.Normal()
+print("normal cube-root scale (expect sqrt(3)):", n.cube_root().scale)
+print("laplace cube-root scale (expect 3):", dist.Laplace().cube_root().scale)
+t = dist.StudentT(nu=7.0)
+print("t nu'=(7-2)/3:", t.cube_root().nu, "E[absmax] B=64:", t.expected_absmax(64))
+
+# 2. element formats
+for name in ["n4", "l4", "t4", "int4", "int4s", "e2m1", "nf4", "sf4", "af4"]:
+    f = parse_format(f"babsmax64:{name}") if name != "sf4" else parse_format("babsmax64:nf4")
+
+for spec in ["trms:t4", "trms:n4", "babsmax128:t4", "babsmax128:int4",
+             "bsignmax128:t4", "cabsmax:n4", "tabsmax:e2m1",
+             "trms:t4:sp0.001", "trms:grid:C", "babsmax64:nf4",
+             "brms64:l3", "babsmax128:t4a", "trms:n4a"]:
+    fmt = parse_format(spec)
+    xhat = fmt.fake_quant(jnp.asarray(x))
+    r = float(fmt.relative_rms_error(jnp.asarray(x)))
+    if spec.endswith(":C"):
+        bits = fmt.measured_bits_per_param(x)
+    else:
+        bits = fmt.bits_per_param(x.shape)
+    print(f"{spec:24s} R={r:.4f}  bits={bits:.3f}  R*2^b={r*2**bits:.2f}")
+
+# 3. Lloyd-Max vs cube-root on normal data (should be close)
+lm = lloyd_max(x, 4)
+cr = el.cube_root_rms(dist.Normal(), 4)
+from repro.core.tensor_format import TensorFormat
+from repro.core.scaling import Scaling
+s = Scaling(granularity="none", statistic="rms", scale_format="exact")
+for nm, f in [("lloyd", lm), ("cbrt", cr)]:
+    tf = TensorFormat(element=f, scaling=s)
+    print(nm, "R:", float(tf.relative_rms_error(jnp.asarray(x))))
+
+# 4. Huffman sanity
+codes = parse_format("trms:t4").element.quantise(jnp.asarray(x))
+hist = code_histogram(np.asarray(codes), 16)
+hc = build_huffman(hist)
+print("entropy:", entropy_bits(hist), "huffman mean bits:", hc.mean_bits(hist))
+payload, nbits = hc.encode(np.asarray(codes)[:4096])
+dec = hc.decode(payload, 4096)
+assert (dec == np.asarray(codes)[:4096].astype(np.int64)).all(), "huffman roundtrip"
+print("huffman roundtrip OK")
+print("ALL CORE SMOKE OK")

@@ -1,0 +1,26 @@
+"""whisper-large-v3 [audio]: 32L(enc)+32L(dec) d_model=1280 20H (MHA)
+d_ff=5120 vocab=51866, enc-dec; conv/mel frontend STUBBED (input_specs
+provides precomputed 1500-frame embeddings) [arXiv:2212.04356;
+unverified]. The assignment lists "32L" — whisper-large is 32 encoder + 32
+decoder layers; both stacks are modelled."""
+from repro.models.api import ModelConfig
+
+ARCH_ID = "whisper-large-v3"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="whisper",
+        n_layers=32, n_enc_layers=32, d_model=1280, n_heads=20,
+        n_kv_heads=20, head_dim=64, d_ff=5120, vocab=51866,
+        enc_seq=1500, tie_embeddings=True, rope_theta=10000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", family="whisper",
+        n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab=256, enc_seq=32,
+        tie_embeddings=True, remat="none",
+    )

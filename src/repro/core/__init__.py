@@ -1,0 +1,31 @@
+"""repro.core — the paper's contribution: optimal quantisation-format design.
+
+Public surface:
+  distributions  — Normal / Laplace / Student-t + Table-4 statistics
+  element        — ∛p, INT, EeMm, NF4/SF4/AF4, quantile, uniform-grid formats
+  scaling        — tensor/channel/block × RMS/absmax/signmax, scale formats
+  tensor_format  — TensorFormat / QuantisedTensor / STE fake-quant
+  sparse         — sparse-outlier storage
+  compress       — entropy accounting + Huffman codec
+  lloyd          — (Fisher-weighted) Lloyd-Max
+  fisher         — diagonal Fisher estimation (Eq. 8)
+  allocation     — Eq. 5 variable bit allocation
+  metrics        — top-k KL, ρ, R
+  rotations      — random-rotation baseline
+  registry       — format-spec strings
+  plan           — whole-model quantisation plans
+"""
+from . import (allocation, compress, distributions, element, fisher, lloyd,
+               metrics, plan, registry, rotations, scaling, search, sparse,
+               tensor_format)
+from .registry import parse_format, HEADLINE_FORMATS
+from .tensor_format import TensorFormat, QuantisedTensor
+from .plan import QuantisationPlan, build_plan, build_allocated_plan
+
+__all__ = [
+    "allocation", "compress", "distributions", "element", "fisher", "lloyd",
+    "metrics", "plan", "registry", "rotations", "scaling", "search", "sparse",
+    "tensor_format", "parse_format", "HEADLINE_FORMATS", "TensorFormat",
+    "QuantisedTensor", "QuantisationPlan", "build_plan",
+    "build_allocated_plan",
+]

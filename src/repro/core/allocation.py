@@ -1,0 +1,93 @@
+"""Fisher-based variable bit-width allocation (Eq. 5, App. B.5):
+
+    b*_t = b0 + log2 RMS(θ_t) + ½ log2 f̄_t
+
+with b0 chosen (by bisection) to satisfy the model-level average-bits
+constraint under clipping and optional integer rounding. Also implements the
+paper's *heuristic* baseline (fig. 30): +2 bits for the first/last two layers
+and embedding/head tensors.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict
+
+import numpy as np
+
+
+def raw_sensitivity(stats: Dict[str, dict]) -> Dict[str, float]:
+    """log2 RMS + ½ log2 f̄ per tensor (the b0-independent part of Eq. 5)."""
+    out = {}
+    for name, s in stats.items():
+        f = max(float(s["fisher_mean"]), 1e-30)
+        r = max(float(s["rms"]), 1e-30)
+        out[name] = math.log2(r) + 0.5 * math.log2(f)
+    return out
+
+
+def allocate_bits(
+    stats: Dict[str, dict],
+    target_bits: float,
+    b_min: float = 0.5,
+    b_max: float = 16.0,
+    integer: bool = False,
+) -> Dict[str, float]:
+    """Solve for b0 such that Σ N_t clip(b0 + raw_t) == target · Σ N_t."""
+    raw = raw_sensitivity(stats)
+    names = list(stats)
+    n = np.array([stats[t]["numel"] for t in names], dtype=np.float64)
+    r = np.array([raw[t] for t in names])
+    total = n.sum()
+
+    def avg_bits(b0: float) -> float:
+        b = np.clip(b0 + r, b_min, b_max)
+        if integer:
+            b = np.maximum(np.round(b), max(1.0, round(b_min)))
+        return float((n * b).sum() / total)
+
+    lo, hi = -64.0, 64.0
+    for _ in range(80):
+        mid = (lo + hi) / 2
+        if avg_bits(mid) < target_bits:
+            lo = mid
+        else:
+            hi = mid
+    b0 = (lo + hi) / 2
+    b = np.clip(b0 + r, b_min, b_max)
+    if integer:
+        b = np.maximum(np.round(b), max(1.0, round(b_min)))
+    return {t: float(bi) for t, bi in zip(names, b)}
+
+
+def heuristic_bits(
+    stats: Dict[str, dict],
+    target_bits: float,
+    n_layers: int,
+    boost: float = 2.0,
+) -> Dict[str, float]:
+    """Paper fig. 30 baseline: +boost bits for the first two / last two
+    transformer layers and the embedding / final-projection tensors."""
+    def is_boosted(name: str) -> bool:
+        if re.search(r"embed|lm_head|head|unembed", name):
+            return True
+        m = re.search(r"layers?[./\[](\d+)", name)
+        if m:
+            li = int(m.group(1))
+            return li < 2 or li >= n_layers - 2
+        return False
+
+    names = list(stats)
+    n = np.array([stats[t]["numel"] for t in names], dtype=np.float64)
+    boosted = np.array([is_boosted(t) for t in names])
+    total = n.sum()
+    # base + boost·frac_boosted = target  =>  base = target - boost·frac
+    frac = float((n * boosted).sum() / total)
+    base = target_bits - boost * frac
+    return {t: base + (boost if bo else 0.0) for t, bo in zip(names, boosted)}
+
+
+def average_bits(alloc: Dict[str, float], stats: Dict[str, dict]) -> float:
+    n = np.array([stats[t]["numel"] for t in alloc], dtype=np.float64)
+    b = np.array([alloc[t] for t in alloc])
+    return float((n * b).sum() / n.sum())

@@ -1,0 +1,50 @@
+"""Evaluation metrics (§4, §D): top-k KL divergence, ρ = KL·2^{2b}, R."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-30
+
+
+def topk_kl(ref_logits: jnp.ndarray, test_logits: jnp.ndarray,
+            k: int = 128) -> jnp.ndarray:
+    """Top-k KL divergence per position (§D). The top-k indices always come
+    from the *reference* model; non-top-k classes collapse into one tail
+    class so the result is a true KL over k+1 classes (>= 0)."""
+    logp = jax.nn.log_softmax(ref_logits.astype(jnp.float32), axis=-1)
+    logq = jax.nn.log_softmax(test_logits.astype(jnp.float32), axis=-1)
+    top_logp, idx = jax.lax.top_k(logp, k)
+    top_logq = jnp.take_along_axis(logq, idx, axis=-1)
+    p_top = jnp.exp(top_logp)
+    kl_top = jnp.sum(p_top * (top_logp - top_logq), axis=-1)
+    p_tail = jnp.clip(1.0 - jnp.sum(p_top, axis=-1), _EPS, 1.0)
+    q_tail = jnp.clip(1.0 - jnp.sum(jnp.exp(top_logq), axis=-1), _EPS, 1.0)
+    return kl_top + p_tail * (jnp.log(p_tail) - jnp.log(q_tail))
+
+
+def mean_topk_kl(ref_logits, test_logits, k: int = 128,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    kl = topk_kl(ref_logits, test_logits, k)
+    if mask is None:
+        return jnp.mean(kl)
+    m = mask.astype(kl.dtype)
+    return jnp.sum(kl * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def rho(kl: float, bits: float) -> float:
+    """Scaled KL divergence ρ := D_KL · 2^{2b} (fig. 8), flattening the
+    Zador-limit 2^{-2b} error scaling."""
+    return float(kl) * 2.0 ** (2.0 * float(bits))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def snr_db(r: float) -> float:
+    """SNR = 1/R^2 in dB (Table 3)."""
+    import math
+    return -20.0 * math.log10(max(float(r), 1e-30))

@@ -1,0 +1,155 @@
+"""Model-level quantisation plans: a per-tensor map of TensorFormats.
+
+This is where the paper's model-level optimisation (Eq. 1/3, §2.4) meets the
+framework: plans are built from a single spec string, from per-tensor bit
+allocations (Eq. 5), or from explicit dicts; applied to parameter pytrees for
+direct-cast, QAT or packed-checkpoint paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import distributions as dist
+from . import element as el
+from .registry import parse_format, parse_scaling, parse_element
+from .scaling import Scaling
+from .tensor_format import TensorFormat
+
+
+def path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _flat_with_paths(tree):
+    return [(path_str(p), x)
+            for p, x in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+@dataclass
+class QuantisationPlan:
+    """Map tensor-path → TensorFormat (None = keep in original dtype)."""
+
+    formats: Dict[str, Optional[TensorFormat]] = field(default_factory=dict)
+
+    def lookup(self, name: str) -> Optional[TensorFormat]:
+        return self.formats.get(name)
+
+    # -- application ---------------------------------------------------------
+    def _map(self, params, fn):
+        from .tensor_format import QuantisedTensor
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=lambda x: isinstance(x, QuantisedTensor))
+        out = [fn(self.formats.get(path_str(p)), x) for p, x in flat]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def fake_quant(self, params):
+        return self._map(params, lambda f, x: x if f is None else f.fake_quant(x))
+
+    def fake_quant_ste(self, params):
+        return self._map(params,
+                         lambda f, x: x if f is None else f.fake_quant_ste(x))
+
+    def quantise(self, params):
+        return self._map(params, lambda f, x: x if f is None else f.quantise(x))
+
+    def dequantise(self, qparams):
+        return self._map(qparams,
+                         lambda f, q: q if f is None else f.dequantise(q))
+
+    # -- accounting -----------------------------------------------------------
+    def bits_per_param(self, params, measured: bool = False,
+                       keep_bits: float = 16.0) -> float:
+        total_bits, total_n = 0.0, 0
+        for name, x in _flat_with_paths(params):
+            n = int(np.prod(x.shape))
+            f = self.formats.get(name)
+            if f is None:
+                total_bits += keep_bits * n
+            elif measured or f.compressed:
+                total_bits += f.measured_bits_per_param(x) * n
+            else:
+                total_bits += f.bits_per_param(x.shape) * n
+            total_n += n
+        return total_bits / max(total_n, 1)
+
+
+def quantisable(name: str, x, min_ndim: int = 2,
+                min_numel: int = 4096) -> bool:
+    """Default policy: quantise big >=2-D tensors; keep small vectors (norm
+    scales, biases, SSM decay params) in the reference dtype — they are <0.1%
+    of parameters and format overhead dominates (DESIGN §Arch-applicability)."""
+    return np.ndim(x) >= min_ndim and int(np.prod(np.shape(x))) >= min_numel
+
+
+def build_plan(params, spec: str, min_ndim: int = 2,
+               overrides: Dict[str, str] | None = None) -> QuantisationPlan:
+    """Uniform plan: every quantisable tensor gets ``spec``; regex overrides
+    (e.g. {"embed": "babsmax128:int8"}) take precedence."""
+    fmt = parse_format(spec)
+    formats: Dict[str, Optional[TensorFormat]] = {}
+    for name, x in _flat_with_paths(params):
+        chosen: Optional[TensorFormat] = None
+        if quantisable(name, x, min_ndim):
+            chosen = fmt
+            if overrides:
+                for pat, s in overrides.items():
+                    if re.search(pat, name):
+                        chosen = parse_format(s) if s else None
+                        break
+        formats[name] = chosen
+    return QuantisationPlan(formats)
+
+
+def build_allocated_plan(
+    params,
+    bit_alloc: Dict[str, float],
+    scaling_spec: str,
+    element_family: str = "t",
+    min_bits: float = 1.0,
+) -> QuantisationPlan:
+    """Variable-bit plan (§2.4): per-tensor bit widths from Eq. 5, realised
+    with the ∛p element family at each tensor's allocated width."""
+    scaling = parse_scaling(scaling_spec)
+    formats: Dict[str, Optional[TensorFormat]] = {}
+    for name, x in _flat_with_paths(params):
+        if name not in bit_alloc or not quantisable(name, x):
+            formats[name] = None
+            continue
+        bits = max(min_bits, bit_alloc[name])
+        elem = parse_element(f"{element_family}{bits:g}", scaling)
+        formats[name] = TensorFormat(element=elem, scaling=scaling,
+                                     name=f"{scaling_spec}:{element_family}{bits:.2f}")
+    return QuantisationPlan(formats)
+
+
+def fit_lloyd_plan(params, bits: float, scaling_spec: str = "trms",
+                   fisher: Optional[dict] = None) -> QuantisationPlan:
+    """Data-fitted Lloyd-Max plan (§2.2), optionally Fisher-weighted."""
+    from .lloyd import lloyd_max
+
+    scaling = parse_scaling(scaling_spec)
+    fisher_flat = dict(_flat_with_paths(fisher)) if fisher is not None else {}
+    formats: Dict[str, Optional[TensorFormat]] = {}
+    for name, x in _flat_with_paths(params):
+        if not quantisable(name, x):
+            formats[name] = None
+            continue
+        xb, _, unblock = scaling.normalise(jnp.asarray(x, jnp.float32))
+        xn = np.asarray(unblock(xb)).reshape(-1)  # normalised, padding trimmed
+        w = fisher_flat.get(name)
+        init = "uniform" if scaling.statistic in ("absmax", "signmax") \
+            else "kmeans++"
+        elem = lloyd_max(xn, bits,
+                         weights=None if w is None else np.asarray(w).reshape(-1),
+                         init=init)
+        formats[name] = TensorFormat(element=elem, scaling=scaling,
+                                     name=f"{scaling_spec}:lloyd{bits:g}")
+    return QuantisationPlan(formats)

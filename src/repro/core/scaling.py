@@ -1,0 +1,192 @@
+"""Linear scaling schemes (§2.1): tensor / channel / block granularity with
+RMS / absmax / signmax statistics, plus quantised *scale formats*
+(bfloat16 round-away, E8M0, E8Mx).
+
+All runtime ops are pure JAX (jit/pjit-safe, shape-polymorphic over leading
+dims). Blocking flattens the tensor and groups the trailing axis into blocks
+of B (padding with zeros as needed; padding is masked out of error metrics
+and bit accounting by the caller via ``numel``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Scale formats
+# ---------------------------------------------------------------------------
+
+
+def _bf16_round_away(x: jnp.ndarray) -> jnp.ndarray:
+    """Round positive values up (away from zero) to the next bfloat16."""
+    y = x.astype(jnp.bfloat16)
+    yf = y.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(y, jnp.uint16)
+    up = jax.lax.bitcast_convert_type(bits + jnp.uint16(1), jnp.bfloat16)
+    return jnp.where(yf < x, up.astype(jnp.float32), yf)
+
+
+def _e8m0_round_away(x: jnp.ndarray) -> jnp.ndarray:
+    """Round positive values up to the next power of two."""
+    m, e = jnp.frexp(x)  # x = m * 2^e, m in [0.5, 1)
+    pow_ = jnp.where(m <= 0.5, e - 1, e)
+    return jnp.where(x > 0, jnp.exp2(pow_.astype(jnp.float32)), x)
+
+
+def _e8mx_round_away(x: jnp.ndarray, mantissa_bits: int) -> jnp.ndarray:
+    """Round positive values up at ``mantissa_bits`` of mantissa precision."""
+    m, e = jnp.frexp(x)  # m in [0.5, 1)
+    q = jnp.exp2(float(mantissa_bits + 1))
+    mq = jnp.ceil(m * q) / q
+    return jnp.where(x > 0, mq * jnp.exp2(e.astype(jnp.float32)), x)
+
+
+def quantise_scale(x: jnp.ndarray, fmt: str) -> jnp.ndarray:
+    """Quantise a (positive) scale tensor with round-away semantics
+    (paper fig. 19: round-away avoids range clipping from a low scale)."""
+    if fmt == "exact":
+        return x
+    if fmt == "bf16":
+        return _bf16_round_away(x)
+    if fmt == "e8m0":
+        return _e8m0_round_away(x)
+    if fmt.startswith("e8m"):
+        return _e8mx_round_away(x, int(fmt[3:]))
+    raise ValueError(f"unknown scale format {fmt!r}")
+
+
+def scale_format_bits(fmt: str, signed: bool = False) -> float:
+    """Storage bits for one scale value. Signmax needs a sign bit on formats
+    that don't already carry one (§2.1)."""
+    if fmt == "exact":
+        base, has_sign = 32.0, True
+    elif fmt == "bf16":
+        base, has_sign = 16.0, True
+    elif fmt == "e8m0":
+        base, has_sign = 8.0, False
+    elif fmt.startswith("e8m"):
+        base, has_sign = 8.0 + int(fmt[3:]), False
+    else:
+        raise ValueError(f"unknown scale format {fmt!r}")
+    return base + (1.0 if signed and not has_sign else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Scaling schemes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Scaling:
+    granularity: str = "block"     # "tensor" | "channel" | "block" | "none"
+    statistic: str = "absmax"      # "rms" | "absmax" | "signmax"
+    block_size: int = 128
+    scale_format: str = "bf16"
+
+    def __post_init__(self):
+        assert self.granularity in ("tensor", "channel", "block",
+                                    "block_rows", "none")
+        assert self.statistic in ("rms", "absmax", "signmax")
+        if self.statistic == "signmax" and self.granularity == "none":
+            raise ValueError("signmax requires a scale")
+
+    # -- blocking -------------------------------------------------------------
+    def blocked_view(self, x: jnp.ndarray):
+        """Return (xb, unblock) where xb has the reduction axis last."""
+        if self.granularity == "none":
+            return x, lambda y: y
+        if self.granularity == "tensor":
+            flat = x.reshape(-1)
+            return flat, lambda y: y.reshape(x.shape)
+        if self.granularity == "channel":
+            # per output-channel: reduce over the trailing (input) axis
+            return x, lambda y: y
+        if self.granularity == "block_rows":
+            # block along the last dim, KEEPING leading dims: the blocked
+            # layout is then sharding-compatible with the source tensor
+            # (used for quantised optimizer moments — avoids involuntary
+            # resharding/replication in SPMD)
+            b = self.block_size
+            assert x.shape[-1] % b == 0, (x.shape, b)
+            xb = x.reshape(*x.shape[:-1], x.shape[-1] // b, b)
+            return xb, lambda y: y.reshape(x.shape)
+        # block
+        b = self.block_size
+        flat = x.reshape(-1)
+        pad = (-flat.shape[0]) % b
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        xb = flat.reshape(-1, b)
+
+        def unblock(y):
+            out = y.reshape(-1)
+            if pad:
+                out = out[: x.size]
+            return out.reshape(x.shape)
+
+        return xb, unblock
+
+    # -- statistics --------------------------------------------------------------
+    def raw_scale(self, xb: jnp.ndarray) -> jnp.ndarray:
+        if self.granularity == "none":
+            return jnp.ones((), dtype=jnp.float32)
+        if self.granularity == "tensor":
+            axis, keep = None, False
+        else:
+            axis, keep = -1, True
+        x32 = xb.astype(jnp.float32)
+        if self.statistic == "rms":
+            return jnp.sqrt(jnp.mean(jnp.square(x32), axis=axis, keepdims=keep))
+        if self.statistic == "absmax":
+            return jnp.max(jnp.abs(x32), axis=axis, keepdims=keep)
+        # signmax: the signed value of max-|.| element
+        idx = jnp.argmax(jnp.abs(x32), axis=axis, keepdims=True)
+        val = jnp.take_along_axis(x32, idx, axis=-1)
+        if self.granularity == "tensor":
+            val = val.reshape(())
+        return val if keep else val.reshape(val.shape[:-1])
+
+    def quantised_scale(self, xb: jnp.ndarray) -> jnp.ndarray:
+        n = self.raw_scale(xb)
+        if self.statistic == "signmax":
+            mag = quantise_scale(jnp.abs(n), self.scale_format)
+            return jnp.where(n < 0, -mag, mag)
+        return quantise_scale(n, self.scale_format)
+
+    # -- normalisation ----------------------------------------------------------
+    def normalise(self, x: jnp.ndarray):
+        """Return (normalised blocked data, scales, unblock fn)."""
+        xb, unblock = self.blocked_view(x)
+        scales = self.quantised_scale(xb)
+        safe = jnp.where(scales == 0, jnp.ones_like(scales), scales)
+        return xb / safe, scales, unblock
+
+    # -- accounting ---------------------------------------------------------------
+    def n_scales(self, shape) -> int:
+        numel = int(np.prod(shape))
+        if self.granularity == "none":
+            return 0
+        if self.granularity == "tensor":
+            return 1
+        if self.granularity == "channel":
+            return int(numel // shape[-1]) if len(shape) else 1
+        if self.granularity == "block_rows":
+            return numel // self.block_size
+        return math.ceil(numel / self.block_size)
+
+    def scale_bits_per_param(self, shape) -> float:
+        numel = int(np.prod(shape))
+        if numel == 0 or self.granularity == "none":
+            return 0.0
+        bits = scale_format_bits(self.scale_format,
+                                 signed=self.statistic == "signmax")
+        return bits * self.n_scales(shape) / numel
+
+    def describe(self) -> str:
+        g = {"tensor": "t", "channel": "c", "block": f"b{self.block_size}",
+             "none": ""}[self.granularity]
+        return f"{g}{self.statistic}~{self.scale_format}"

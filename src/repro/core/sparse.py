@@ -1,0 +1,62 @@
+"""Sparse-outlier storage (§1, §2; SqueezeLLM/SpQR-style).
+
+The top ``frac`` of parameters by |value| are removed from the dense payload
+(set to 0 before quantisation) and stored separately in bfloat16 with int32
+coordinates. Overhead = frac * (32 + 16) bits/param by default.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+IDX_BITS = 32.0
+VAL_BITS = 16.0
+
+
+@dataclass(frozen=True)
+class SparseOutliers:
+    frac: float = 1e-3
+
+    def bits_per_param(self) -> float:
+        return self.frac * (IDX_BITS + VAL_BITS)
+
+    def split(self, x: jnp.ndarray):
+        """Return (dense, mask): exactly ``capacity`` top-|x| elements are
+        outliers (zeroed in dense). Matches the packed top-k path bit-exactly."""
+        import jax
+
+        k = self.capacity(int(np.prod(x.shape)))
+        flat = x.reshape(-1)
+        _, idx = jax.lax.top_k(jnp.abs(flat.astype(jnp.float32)), k)
+        mask = jnp.zeros(flat.shape, jnp.bool_).at[idx].set(True)
+        mask = mask.reshape(x.shape)
+        dense = jnp.where(mask, jnp.zeros_like(x), x)
+        return dense, mask
+
+    def merge(self, x_hat: jnp.ndarray, x_orig: jnp.ndarray,
+              mask: jnp.ndarray) -> jnp.ndarray:
+        """Splice bf16 outliers back into the dequantised dense tensor."""
+        outliers = x_orig.astype(jnp.bfloat16).astype(x_hat.dtype)
+        return jnp.where(mask, outliers, x_hat)
+
+    def capacity(self, numel: int) -> int:
+        """Static COO capacity for a tensor of ``numel`` elements."""
+        return max(1, int(round(self.frac * numel)))
+
+
+def extract_topk(x: jnp.ndarray, k: int):
+    """COO extraction of the k largest-|.| values. jit-safe (static k)."""
+    import jax
+
+    flat = x.reshape(-1).astype(jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx].astype(jnp.bfloat16)
+    return idx.astype(jnp.int32), vals
+
+
+def scatter_coo(x_hat: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray):
+    flat = x_hat.reshape(-1)
+    flat = flat.at[idx].set(vals.astype(flat.dtype))
+    return flat.reshape(x_hat.shape)

@@ -1,0 +1,177 @@
+"""TensorFormat — the paper's composable format for one parameter tensor:
+
+    TensorFormat = element format × scaling scheme × sparse outliers
+                   × optional lossless compression
+
+Provides three execution paths:
+
+  * ``fake_quant(x)``        — dequantise(quantise(x)), fully differentiable
+                               via a straight-through estimator (QAT, §D) and
+                               used for direct-cast evaluation.
+  * ``quantise(x)``          — packed representation (codes + scales + COO
+                               outliers) as a jit-safe pytree, for quantised
+                               checkpoints and the serving path.
+  * ``bits_per_param(...)``  — exact storage accounting, including the scale
+                               overhead, sparse overhead and (if compressed)
+                               the Shannon-limit entropy of the code stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compress import entropy_bits, code_histogram, huffman_bits_per_symbol
+from .element import ElementFormat, UniformGrid
+from .scaling import Scaling
+from .sparse import SparseOutliers, extract_topk, scatter_coo
+
+
+def ste(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through estimator: forward = x_hat, backward = identity."""
+    return x + jax.lax.stop_gradient(x_hat - x)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class QuantisedTensor:
+    codes: jnp.ndarray                  # uint8/int32, blocked layout
+    scales: jnp.ndarray                 # per tensor/channel/block
+    sparse_idx: Optional[jnp.ndarray]   # int32 flat indices or None
+    sparse_val: Optional[jnp.ndarray]   # bf16 values or None
+    shape: tuple = dataclasses.field(metadata=dict(static=True), default=())
+    dtype: str = dataclasses.field(metadata=dict(static=True), default="float32")
+
+    @property
+    def nbytes_packed(self) -> int:
+        n = self.codes.size * self.codes.dtype.itemsize + self.scales.size * 2
+        if self.sparse_idx is not None:
+            n += self.sparse_idx.size * 4 + self.sparse_val.size * 2
+        return n
+
+
+@dataclass(frozen=True)
+class TensorFormat:
+    element: Union[ElementFormat, UniformGrid]
+    scaling: Scaling = Scaling()
+    sparse: Optional[SparseOutliers] = None
+    compressed: bool = False
+    name: str = ""
+
+    # ------------------------------------------------------------------ utils
+    def describe(self) -> str:
+        if self.name:
+            return self.name
+        s = f"{self.scaling.describe()}:{self.element.name}"
+        if self.sparse:
+            s += f":sp{self.sparse.frac:g}"
+        if self.compressed:
+            s += ":C"
+        return s
+
+    # ------------------------------------------------------------- fake-quant
+    def fake_quant(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Direct-cast round trip (no gradient tricks)."""
+        orig_dtype = x.dtype
+        x32 = x.astype(jnp.float32)
+        mask = None
+        dense = x32
+        if self.sparse is not None and self.sparse.frac > 0:
+            dense, mask = self.sparse.split(x32)
+        xb, scales, unblock = self.scaling.normalise(dense)
+        y = self.element.fake_quant(xb) * scales
+        y = unblock(y)
+        if mask is not None:
+            y = self.sparse.merge(y, x32, mask)
+        return y.astype(orig_dtype)
+
+    def fake_quant_ste(self, x: jnp.ndarray) -> jnp.ndarray:
+        """QAT forward: quantised values, identity gradient (paper §D QAT)."""
+        return ste(x, self.fake_quant(x))
+
+    # ------------------------------------------------------------------ packed
+    def quantise(self, x: jnp.ndarray) -> QuantisedTensor:
+        x32 = x.astype(jnp.float32)
+        sp_idx = sp_val = None
+        dense = x32
+        if self.sparse is not None and self.sparse.frac > 0:
+            k = self.sparse.capacity(int(np.prod(x.shape)))
+            sp_idx, sp_val = extract_topk(x32, k)
+            dense = scatter_coo(x32, sp_idx, jnp.zeros_like(sp_val)).astype(
+                jnp.float32)
+        xb, scales, _ = self.scaling.normalise(dense)
+        codes = self.element.quantise(xb)
+        return QuantisedTensor(codes, scales.astype(jnp.bfloat16), sp_idx,
+                               sp_val, tuple(x.shape), str(x.dtype))
+
+    def dequantise(self, qt: QuantisedTensor) -> jnp.ndarray:
+        vals = self.element.dequantise(qt.codes) * qt.scales.astype(jnp.float32)
+        flat = vals.reshape(-1)[: int(np.prod(qt.shape))]
+        y = flat.reshape(qt.shape)
+        if qt.sparse_idx is not None:
+            y = scatter_coo(y, qt.sparse_idx, qt.sparse_val)
+        return y.astype(qt.dtype)
+
+    # -------------------------------------------------------------- accounting
+    def element_bits(self) -> float:
+        if isinstance(self.element, UniformGrid):
+            raise ValueError("uniform grid bits are data-dependent (entropy); "
+                             "use measured_bits_per_param")
+        return self.element.bits
+
+    def bits_per_param(self, shape) -> float:
+        """Analytic bits/param (fixed-length element code)."""
+        b = self.element_bits() + self.scaling.scale_bits_per_param(shape)
+        if self.sparse is not None:
+            b += self.sparse.bits_per_param()
+        return b
+
+    def measured_bits_per_param(self, x, practical_huffman: bool = False,
+                                model_hist: np.ndarray | None = None) -> float:
+        """Bits/param measured on data. For ``compressed`` formats the element
+        cost is the Shannon entropy of the actual code stream (or the Huffman
+        mean code length if ``practical_huffman``)."""
+        shape = tuple(np.asarray(x).shape)
+        numel = int(np.prod(shape))
+        qt = self.quantise(jnp.asarray(x))
+        if self.compressed:
+            n_codes = (None if isinstance(self.element, UniformGrid)
+                       else self.element.n)
+            codes = np.asarray(qt.codes).reshape(-1)[:numel]
+            if practical_huffman:
+                eb = huffman_bits_per_symbol(codes, n_codes)
+            elif model_hist is not None:
+                from .compress import cross_entropy_bits
+                eb = cross_entropy_bits(code_histogram(codes, n_codes),
+                                        model_hist)
+            else:
+                eb = entropy_bits(code_histogram(codes, n_codes))
+        else:
+            eb = self.element_bits()
+        b = eb + self.scaling.scale_bits_per_param(shape)
+        if self.sparse is not None:
+            b += self.sparse.bits_per_param()
+        return float(b)
+
+    # ------------------------------------------------------------------ errors
+    def relative_rms_error(self, x: jnp.ndarray,
+                           weights: jnp.ndarray | None = None) -> jnp.ndarray:
+        """R := RMS error / RMS of the data (§C); optionally Fisher-weighted."""
+        x32 = jnp.asarray(x, jnp.float32)
+        err = self.fake_quant(x32) - x32
+        if weights is None:
+            return jnp.sqrt(jnp.sum(err * err) / jnp.sum(x32 * x32))
+        w = jnp.asarray(weights, jnp.float32)
+        return jnp.sqrt(jnp.sum(w * err * err) / jnp.sum(w * x32 * x32))
+
+
+# convenience jit wrapper (format is static)
+@partial(jax.jit, static_argnums=0)
+def fake_quant_jit(fmt: TensorFormat, x: jnp.ndarray) -> jnp.ndarray:
+    return fmt.fake_quant(x)

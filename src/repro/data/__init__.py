@@ -1,0 +1,4 @@
+from . import pipeline  # noqa: F401
+from .pipeline import DataConfig, make_batch_fn, tokens_at
+
+__all__ = ["pipeline", "DataConfig", "make_batch_fn", "tokens_at"]

@@ -1,0 +1,10 @@
+"""repro.kernels — Pallas TPU kernels for the paper's compute hot-spots.
+
+  block_quant     fused block-absmax quantise (codes + scales in one pass)
+  dequant_matmul  fused dequantise @ x — the memory-bound serving matmul
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper
+with CPU fallback), ref.py (pure-jnp oracle). Validated in interpret=True on
+CPU; the TPU path is the deployment target.
+"""
+from . import ops  # noqa: F401

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the block-absmax quantise kernel.
+
+Layout: x (rows, cols) with cols % block == 0. Blocks run along the last
+dim (one scale per (row, block) pair — the TPU-native layout where block=128
+matches the lane width, so scales align with tiles)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_quant_ref(x: jnp.ndarray, codebook: jnp.ndarray, block: int = 128):
+    """Returns (codes uint8 (rows, cols), scales f32 (rows, cols/block)).
+
+    scale = absmax over each block (bf16 round-away); codes index the
+    codebook (sorted, covering [-1, 1]) by round-to-nearest."""
+    rows, cols = x.shape
+    xb = x.reshape(rows, cols // block, block).astype(jnp.float32)
+    scales = jnp.max(jnp.abs(xb), axis=-1)
+    # bf16 round-away (never shrink the scale: |x|/scale must stay <= 1)
+    s16 = scales.astype(jnp.bfloat16)
+    up = jax.lax.bitcast_convert_type(
+        jax.lax.bitcast_convert_type(s16, jnp.uint16) + jnp.uint16(1),
+        jnp.bfloat16)
+    scales = jnp.where(s16.astype(jnp.float32) < scales,
+                       up.astype(jnp.float32), s16.astype(jnp.float32))
+    safe = jnp.where(scales == 0, 1.0, scales)
+    norm = xb / safe[..., None]
+    mids = (codebook[1:] + codebook[:-1]) * 0.5
+    codes = jnp.searchsorted(mids, norm.reshape(rows, cols)).astype(jnp.uint8)
+    return codes, scales
+
+
+def block_dequant_ref(codes: jnp.ndarray, scales: jnp.ndarray,
+                      codebook: jnp.ndarray, block: int = 128,
+                      dtype=jnp.bfloat16):
+    rows, cols = codes.shape
+    vals = codebook[codes.astype(jnp.int32)].reshape(rows, cols // block,
+                                                     block)
+    out = vals * scales[..., None]
+    return out.reshape(rows, cols).astype(dtype)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused dequantise-matmul kernel.
+
+y = x @ dequant(codes, scales): x (M, K) bf16; weight codes (K, N) uint8
+with scales (K, N/block) — blocks along the output (lane) dim."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_matmul_ref(x, codes, scales, codebook, block: int = 128):
+    K, N = codes.shape
+    w = codebook[codes.astype(jnp.int32)].reshape(K, N // block, block)
+    w = (w * scales[..., None]).reshape(K, N)
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)

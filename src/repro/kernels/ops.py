@@ -1,0 +1,53 @@
+"""jit'd public wrappers over the Pallas kernels, with automatic fallback to
+the jnp oracle off-TPU (the container is CPU; interpret=True exercises the
+kernel bodies in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .block_quant.block_quant import block_quant as _bq_pallas
+from .block_quant.ref import block_quant_ref, block_dequant_ref
+from .dequant_matmul.dequant_matmul import dequant_matmul as _dqm_pallas
+from .dequant_matmul.ref import dequant_matmul_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def block_quant(x, codebook, block: int = 128, interpret: bool | None = None):
+    """Quantise a 2-D weight into (codes, scales). Uses the Pallas kernel on
+    TPU (or in interpret mode); jnp oracle otherwise."""
+    if interpret is None:
+        interpret = not on_tpu()
+    if interpret and not on_tpu():
+        # fall back to the oracle for speed unless explicitly interpreting
+        return block_quant_ref(x, codebook, block)
+    return _bq_pallas(x, codebook, block=block, interpret=interpret)
+
+
+def block_quant_interpret(x, codebook, block: int = 128):
+    """Force the Pallas kernel body in interpret mode (tests)."""
+    return _bq_pallas(x, codebook, block=block, interpret=True)
+
+
+def block_dequant(codes, scales, codebook, block: int = 128,
+                  dtype=jnp.bfloat16):
+    return block_dequant_ref(codes, scales, codebook, block, dtype)
+
+
+def dequant_matmul(x, codes, scales, codebook, block: int = 128,
+                   interpret: bool | None = None):
+    """x @ dequant(codes, scales) — fused on TPU; oracle off-TPU."""
+    if interpret is None:
+        interpret = not on_tpu()
+    if interpret and not on_tpu():
+        return dequant_matmul_ref(x, codes, scales, codebook, block)
+    return _dqm_pallas(x, codes, scales, codebook, block=block,
+                       interpret=interpret)
+
+
+def dequant_matmul_interpret(x, codes, scales, codebook, block: int = 128):
+    return _dqm_pallas(x, codes, scales, codebook, block=block,
+                       interpret=True)

@@ -1,0 +1,9 @@
+"""repro.launch — production mesh, dry-run, training/serving drivers.
+
+NOTE: do not import ``dryrun`` from here — it sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` at import, which
+must only happen in a dedicated process."""
+from . import analysis, mesh  # noqa: F401
+from .mesh import make_production_mesh, shardings_for_specs
+
+__all__ = ["analysis", "mesh", "make_production_mesh", "shardings_for_specs"]

@@ -1,0 +1,576 @@
+"""Compiled-artifact analysis: collective-byte parsing from optimized HLO
+and analytic per-device memory accounting (the roofline's raw inputs).
+
+Collective cost model (per-device bytes on a ring, group size n):
+    all-gather       (n-1)/n × output_bytes
+    all-reduce     2·(n-1)/n × input_bytes
+    reduce-scatter   (n-1)/n × input_bytes
+    all-to-all       (n-1)/n × input_bytes
+    collective-permute        input_bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _first_shape_bytes(segment: str) -> int:
+    """Sum byte sizes of all leading shapes (handles tuple results)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(segment):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",")]))
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_OP_CALL_RE = re.compile(
+    r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?(\.\d+)?\(")
+# header params may contain nested parens (tuple types) — just require
+# "name (... -> ... {" shape
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{$")
+_WHILE_RE = re.compile(r"\swhile\(")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+        elif line.strip() == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line.strip())
+    comps["__entry__"] = comps.get(entry, [])
+    return comps
+
+
+def _trip_count(cond_lines: list) -> int:
+    """Best-effort trip count from a while condition: the max integer
+    constant compared against the loop counter (scan lengths)."""
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in _CONST_RE.finditer(line)]
+    consts = [c for c in consts if c > 1]
+    return max(consts) if consts else 1
+
+
+def parse_collective_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-device collective bytes by op type, from the post-SPMD HLO.
+
+    While-loop (lax.scan) bodies are walked with their trip count as a
+    multiplier — a collective inside a 126-layer scan costs 126×. Result
+    shapes precede the op call on each definition line; '-done' ops are
+    skipped (bytes counted once at '-start'/plain)."""
+    comps = _split_computations(hlo_text)
+    out: Dict[str, float] = defaultdict(float)
+
+    def line_bytes(s: str):
+        if "=" not in s:
+            return None
+        _, rhs = s.split("=", 1)
+        m = _OP_CALL_RE.search(rhs)
+        if m is None or "-done" in rhs[: m.start() + 1]:
+            return None
+        op = m.group(1)
+        result_bytes = _first_shape_bytes(rhs[: m.start()])
+        if result_bytes == 0:
+            return None
+        n = _group_size(s, n_devices)
+        frac = (n - 1) / max(n, 1)
+        if op == "all-gather":
+            b = frac * result_bytes
+        elif op == "all-reduce":
+            b = 2.0 * frac * result_bytes   # result == input shape
+        elif op == "reduce-scatter":
+            b = frac * result_bytes * n     # input = result × n
+        elif op == "all-to-all":
+            b = frac * result_bytes
+        else:  # collective-permute
+            b = result_bytes
+        return op, b
+
+    def walk(comp: str, mult: float, depth: int = 0):
+        if comp not in comps or depth > 16:
+            return
+        for s in comps[comp]:
+            if _WHILE_RE.search(s):
+                bm, cm = _BODY_RE.search(s), _COND_RE.search(s)
+                if bm and cm:
+                    trips = _trip_count(comps.get(cm.group(1), []))
+                    walk(bm.group(1), mult * trips, depth + 1)
+                continue
+            br = _BRANCHES_RE.search(s)
+            if br:
+                for b in br.group(1).split(","):
+                    walk(b.strip().lstrip("%"), mult, depth + 1)
+                continue
+            cm = _CALLS_RE.search(s)
+            got = line_bytes(s)
+            if got is not None:
+                op, b = got
+                out[op] += b * mult
+                out["total"] += b * mult
+            elif cm and "fusion" not in s:
+                walk(cm.group(1), mult, depth + 1)
+
+    walk("__entry__", 1.0)
+    return dict(out)
+
+
+def count_hlo_ops(hlo_text: str, patterns=("fusion", "dot", "scan", "while",
+                                           "transpose", "reshape")) -> dict:
+    counts = {}
+    for p in patterns:
+        counts[p] = len(re.findall(rf"= \S* {p}", hlo_text)) + \
+            len(re.findall(rf"\b{p}\(", hlo_text))
+    return counts
+
+
+# ------------------------------------------------------ while-aware FLOPs
+#
+# XLA's cost_analysis() counts each while (lax.scan) body ONCE — for a
+# 126-layer scanned model that under-reports FLOPs ~126×. We therefore count
+# dot FLOPs ourselves from the optimized HLO, multiplying loop bodies by
+# their trip count. Elementwise/VPU work is excluded (the compute roofline
+# term is MXU-bound); convs likewise (none of the zoo lowers to conv HLO).
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_DOT_RE = re.compile(r"\sdot\(")
+_SHAPE_ONLY_RE = re.compile(r"^(\w+)\[([0-9,]*)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"dot\(([^)]*)\)")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*([a-z0-9]+\[[0-9,]*\])")
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_ONLY_RE.match(type_str.strip())
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def _numel(type_str: str) -> int:
+    d = _shape_dims(type_str)
+    return int(np.prod(d)) if d is not None else 0
+
+
+def parse_hlo_dot_flops(hlo_text: str) -> float:
+    return parse_hlo_dot_stats(hlo_text)[0]
+
+
+def parse_hlo_dot_bytes(hlo_text: str) -> float:
+    """Dot-level HBM traffic (operands+results of matmuls, trip-aware): the
+    TPU-realistic memory model — on TPU every matmul's operands/results
+    stream HBM⇄VMEM while elementwise work fuses into them. The fusion-level
+    model (parse_hlo_memory_bytes) is the upper bound at the CPU backend's
+    fusion granularity."""
+    return parse_hlo_dot_stats(hlo_text)[1]
+
+
+def parse_hlo_dot_stats(hlo_text: str):
+    """(total dot FLOPs, total dot bytes) per device, with while-body trip
+    multiplication. FLOPs(dot) = 2 × numel(result) × contracted size."""
+    comps = _split_computations(hlo_text)
+
+    # symbol tables: per computation, %name -> type string
+    symtab: Dict[str, Dict[str, str]] = {}
+    raw_headers: Dict[str, str] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        st = line.strip()
+        m = _COMP_HDR_RE.match(st)
+        if m and st.endswith("{"):
+            cur = m.group(1)
+            symtab[cur] = {}
+            raw_headers[cur] = st
+            for pm in _PARAM_RE.finditer(st):
+                symtab[cur][pm.group(1)] = pm.group(2)
+        elif st == "}":
+            cur = None
+        elif cur is not None:
+            dm = _DEF_RE.match(st)
+            if dm:
+                symtab[cur][dm.group(1)] = dm.group(2)
+
+    def _operand_type(comp, ref):
+        ref = ref.strip()
+        if "[" in ref and "%" in ref:
+            return ref.split("%")[0].strip()
+        if "[" in ref:
+            return ref
+        return symtab.get(comp, {}).get(ref.lstrip("%"))
+
+    def _type_bytes_simple(t):
+        if not t:
+            return 0
+        m = _SHAPE_ONLY_RE.match(t.strip())
+        if not m:
+            return 0
+        dt, dims = m.group(1), m.group(2)
+        n = int(np.prod([int(d) for d in dims.split(",")])) if dims else 1
+        return n * _DTYPE_BYTES.get(dt, 4)
+
+    def comp_local_stats(comp: str):
+        flops, nbytes = 0.0, 0.0
+        for s in comps.get(comp, []):
+            if not _DOT_RE.search(s) or "=" not in s:
+                continue
+            name_m = _DEF_RE.match(s)
+            if not name_m:
+                continue
+            rhs = name_m.group(2)
+            result_numel = _numel(rhs)
+            nbytes += _type_bytes_simple(rhs)
+            cm = _CONTRACT_RE.search(s)
+            om = _OPERANDS_RE.search(s)
+            if not (cm and om):
+                continue
+            refs = om.group(1).split(",")
+            lhs_type = _operand_type(comp, refs[0])
+            for r in refs[:2]:
+                nbytes += _type_bytes_simple(_operand_type(comp, r))
+            dims = _shape_dims(lhs_type) if lhs_type else None
+            if dims is None:
+                continue
+            cdims = [int(x) for x in cm.group(1).split(",") if x != ""]
+            csize = int(np.prod([dims[i] for i in cdims])) if cdims else 1
+            flops += 2.0 * result_numel * csize
+        return flops, nbytes
+
+    total_f, total_b = 0.0, 0.0
+
+    def walk(comp: str, mult: float, depth: int = 0):
+        nonlocal total_f, total_b
+        if comp not in comps or depth > 24:
+            return
+        f, b = comp_local_stats(comp)
+        total_f += f * mult
+        total_b += b * mult
+        for s in comps[comp]:
+            if _WHILE_RE.search(s):
+                bm, cm2 = _BODY_RE.search(s), _COND_RE.search(s)
+                if bm and cm2:
+                    trips = _trip_count(comps.get(cm2.group(1), []))
+                    walk(bm.group(1), mult * trips, depth + 1)
+                continue
+            br = _BRANCHES_RE.search(s)
+            if br:
+                for b2 in br.group(1).split(","):
+                    walk(b2.strip().lstrip("%"), mult, depth + 1)
+                continue
+            cm2 = _CALLS_RE.search(s)
+            if cm2:
+                walk(cm2.group(1), mult, depth + 1)
+
+    walk("__entry__", 1.0)
+    return total_f, total_b
+
+
+_OP_NAME_RE = re.compile(r"^(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?|\([^)]*\))\s+"
+                         r"([\w\-]+)")
+# ops that move no HBM bytes (metadata / aliasing / control)
+_FREE_OPS = {"get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota",
+             "add-dependency", "custom-call", "while", "conditional", "call"}
+
+
+def parse_hlo_memory_bytes(hlo_text: str) -> float:
+    """Approximate per-device HBM traffic with while-trip multiplication.
+
+    Model: each *top-level* op in a computation (fusions are the unit of
+    memory traffic — their internals stay in registers/VMEM) reads its
+    operands and writes its result once. Control/aliasing ops are free;
+    loop bodies multiply by trip count. This replaces cost_analysis()'s
+    'bytes accessed', which counts loop bodies once."""
+    comps = _split_computations(hlo_text)
+
+    symtab: Dict[str, Dict[str, str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        st = line.strip()
+        m = _COMP_HDR_RE.match(st)
+        if m and st.endswith("{"):
+            cur = m.group(1)
+            symtab[cur] = {}
+            for pm in _PARAM_RE.finditer(st):
+                symtab[cur][pm.group(1)] = pm.group(2)
+        elif st == "}":
+            cur = None
+        elif cur is not None:
+            dm = _DEF_RE.match(st)
+            if dm:
+                symtab[cur][dm.group(1)] = dm.group(2)
+
+    def type_bytes(type_str: str) -> int:
+        if type_str is None:
+            return 0
+        total = 0
+        for m in _SHAPE_RE.finditer(type_str.split(" ")[0] if "(" not in
+                                    type_str else type_str[:type_str.find(")") + 1]):
+            dt, dims = m.group(1), m.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = int(np.prod([int(d) for d in dims.split(",")])) if dims else 1
+            total += n * _DTYPE_BYTES[dt]
+        return total
+
+    def operand_bytes(comp: str, rhs: str) -> int:
+        # args of the first call parens
+        start = rhs.find("(")
+        if start < 0:
+            return 0
+        depth, end = 0, start
+        for i in range(start, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = rhs[start + 1: end]
+        total = 0
+        for ref in re.findall(r"%([\w.\-]+)", args):
+            t = symtab.get(comp, {}).get(ref)
+            if t:
+                total += type_bytes(t.split(" ")[0] if not t.startswith("(")
+                                    else t[: t.find(")") + 1])
+        return total
+
+    def _arg_refs(rhs: str):
+        start = rhs.find("(")
+        if start < 0:
+            return []
+        depth, end = 0, start
+        for i in range(start, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return re.findall(r"%([\w.\-]+)", rhs[start + 1: end])
+
+    def _loop_invariants(comp: str) -> set:
+        """Symbols that are loop-invariant in a while body: tuple elements
+        extracted by get-tuple-element(param, i) and passed through
+        unchanged at root-tuple position i (scan's stacked xs arrays).
+        Fusions slice these with the loop counter — count the slice, not
+        the full array."""
+        gte_idx: Dict[str, int] = {}
+        root_args = None
+        for s in comps.get(comp, []):
+            dm = _DEF_RE.match(s)
+            if not dm:
+                continue
+            name, rhs = dm.group(1), dm.group(2)
+            m = re.search(r"get-tuple-element\(%([\w.\-]+)\), index=(\d+)",
+                          rhs)
+            if m and "parameter" in symtab.get(comp, {}).get(
+                    m.group(1), "parameter"):
+                gte_idx[name] = int(m.group(2))
+            if s.startswith("ROOT") and " tuple(" in rhs:
+                root_args = _arg_refs(rhs)
+        if not root_args:
+            return set()
+        inv = set()
+        for j, ref in enumerate(root_args):
+            if gte_idx.get(ref) == j:
+                inv.add(ref)
+        return inv
+
+    def comp_local_bytes(comp: str) -> float:
+        total = 0.0
+        invariants = _loop_invariants(comp)
+        for s in comps.get(comp, []):
+            dm = _DEF_RE.match(s)
+            if not dm:
+                continue
+            rhs = dm.group(2)
+            om = _OP_NAME_RE.match(rhs)
+            op = om.group(1) if om else ""
+            if op in _FREE_OPS or op == "":
+                continue
+            res = type_bytes(rhs)
+            if op == "dynamic-slice":
+                # reads only the slice (== result), not the full operand —
+                # the operand is typically a loop-invariant stacked array
+                total += 2 * res
+                continue
+            if op == "dynamic-update-slice" or (
+                    op == "fusion" and "dynamic-update-slice" in s):
+                # in-place slice update (raw or fused): reads+writes only
+                # the updated region; the big buffer aliases in place.
+                # Count the small (non-aliased) operands ×2.
+                small = 0
+                for ref in _arg_refs(rhs):
+                    t = symtab.get(comp, {}).get(ref)
+                    if not t:
+                        continue
+                    tb = type_bytes(t.split(" ")[0] if not t.startswith("(")
+                                    else t[: t.find(")") + 1])
+                    if tb < res:
+                        small += tb
+                total += 2 * small
+                continue
+            total += res
+            for ref in _arg_refs(rhs):
+                if ref in invariants:
+                    continue  # fused slice of a loop-invariant array
+                t = symtab.get(comp, {}).get(ref)
+                if t:
+                    total += type_bytes(t.split(" ")[0] if not
+                                        t.startswith("(")
+                                        else t[: t.find(")") + 1])
+        return total
+
+    total = 0.0
+
+    def walk(comp: str, mult: float, depth: int = 0):
+        nonlocal total
+        if comp not in comps or depth > 24:
+            return
+        total += comp_local_bytes(comp) * mult
+        for s in comps[comp]:
+            if _WHILE_RE.search(s):
+                bm, cm2 = _BODY_RE.search(s), _COND_RE.search(s)
+                if bm and cm2:
+                    trips = _trip_count(comps.get(cm2.group(1), []))
+                    walk(bm.group(1), mult * trips, depth + 1)
+                continue
+            br = _BRANCHES_RE.search(s)
+            if br:
+                for b in br.group(1).split(","):
+                    walk(b.strip().lstrip("%"), mult, depth + 1)
+                continue
+            cm2 = _CALLS_RE.search(s)
+            if cm2 and "fusion" not in s:
+                walk(cm2.group(1), mult, depth + 1)
+
+    walk("__entry__", 1.0)
+    return total
+
+
+def while_trip_counts(hlo_text: str):
+    """Diagnostic: list of (body_name, trip_count)."""
+    comps = _split_computations(hlo_text)
+    out = []
+    for comp, lines in comps.items():
+        for s in lines:
+            if _WHILE_RE.search(s):
+                bm, cm = _BODY_RE.search(s), _COND_RE.search(s)
+                if bm and cm:
+                    out.append((bm.group(1),
+                                _trip_count(comps.get(cm.group(1), []))))
+    return out
+
+
+# ---------------------------------------------------------- analytic memory
+
+def analytic_bytes_per_device(spec_tree, mesh, rules, dtype_bytes=None) -> int:
+    """Exact per-device bytes for a ParamSpec tree under a rule set."""
+    from repro.launch.mesh import spec_for, _axes_size
+    from repro.models.api import ParamSpec
+    import jax
+
+    total = 0
+    for s in jax.tree.leaves(spec_tree,
+                             is_leaf=lambda x: isinstance(x, ParamSpec)):
+        if not isinstance(s, ParamSpec):
+            continue
+        ps = spec_for(s.axes, s.shape, mesh, rules)
+        shard = 1
+        for part in ps:
+            if part is None:
+                continue
+            axes = (part,) if isinstance(part, str) else part
+            shard *= _axes_size(mesh, tuple(axes))
+        itemsize = np.dtype(s.dtype).itemsize
+        total += s.numel * itemsize // max(shard, 1)
+    return total
+
+
+# ------------------------------------------------------------ model flops
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training (fwd+bwd), 2·N_active·D for decode
+    (+ attention KV term), N = active params excluding embeddings' unused
+    rows. D = tokens processed."""
+    from repro.models.api import count_params, get_family
+
+    fam = get_family(cfg.family)
+    n_total = count_params(fam.param_specs(cfg))
+    # active params: for MoE, experts contribute k/E of their weight
+    n_active = n_total
+    if cfg.n_experts:
+        E, k = cfg.n_experts, cfg.experts_per_token
+        # expert tensors: 3 matrices per expert per layer
+        expert_params = cfg.n_layers * E * 3 * cfg.d_model * cfg.dff_expert
+        n_active = n_total - expert_params + expert_params * k / E
+    # embedding rows are lookups, not matmuls: subtract embed (keep unembed)
+    embed = cfg.vocab * cfg.d_model
+    n_active -= embed
+    def attn_score_flops(n_passes):
+        # QK^T + AV: 2 matmuls × 2 FLOPs × B × T²/2 (causal) × H × hd / layer
+        if cfg.family not in ("transformer", "internvl", "whisper"):
+            return 0.0
+        return (n_passes * 2 * 2 * shape.batch * shape.seq ** 2 / 2
+                * cfg.n_heads * cfg.hd * cfg.n_layers)
+
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens + attn_score_flops(3)  # fwd+bwd(2x)
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens + attn_score_flops(1)
+    # decode: one token, KV attention reads
+    tokens = shape.batch
+    flops = 2.0 * n_active * tokens
+    if cfg.family in ("transformer", "internvl", "whisper"):
+        flops += 2 * 2 * shape.batch * shape.seq * cfg.n_heads * cfg.hd * \
+            cfg.n_layers
+    return flops

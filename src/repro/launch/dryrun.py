@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, proving the distribution config is coherent, and
+recording memory / FLOP / collective analysis for §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+NOTE: the XLA_FLAGS line above MUST precede every other import — jax locks
+the device count at first init. Only the dry-run uses 512 placeholder
+devices; tests and benchmarks see 1 device.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import analysis
+from repro.launch.mesh import (RULES_BY_KIND, decode_rules_for,
+                               make_production_mesh, shardings_for_specs,
+                               spec_for)
+from repro.models import api as mapi
+from repro.train.loop import TrainConfig, make_train_step
+from repro.train.optimizer import AdamConfig, adam_init
+from repro.core.tensor_format import QuantisedTensor
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def rules_for(shape: configs.Shape, cfg=None, mesh=None):
+    if shape.kind == "decode" and shape.batch == 1:
+        return RULES_BY_KIND["long_decode"]
+    if shape.kind == "decode" and cfg is not None and mesh is not None:
+        return decode_rules_for(cfg.n_kv_heads, mesh)
+    return RULES_BY_KIND[shape.kind]
+
+
+def _batch_shardings(batch_specs, mesh, rules):
+    return shardings_for_specs(batch_specs, mesh, rules)
+
+
+def _opt_shardings(param_specs_tree, opt_sds, mesh, rules):
+    """Shardings for Adam state: plain moments share the parameter sharding;
+    quantised moments block the LAST dim keeping leading dims (block_rows),
+    so they take the parameter's PartitionSpec on leading dims and map the
+    parameter's last-dim axes onto the block-count dim when divisible."""
+
+    def _part_size(part):
+        axes = (part,) if isinstance(part, str) else tuple(part)
+        return int(np.prod([mesh.shape[a] for a in axes]))
+
+    def one(pspec, node):
+        base = spec_for(pspec.axes, pspec.shape, mesh, rules)
+        if isinstance(node, QuantisedTensor):
+            parts = list(base) + [None] * (len(pspec.shape) - len(base))
+
+            def qsh(x):
+                lead = parts[:-1]
+                nb = x.shape[len(pspec.shape) - 1]
+                last = parts[-1]
+                if last is not None and nb % _part_size(last) != 0:
+                    last = None
+                return NamedSharding(mesh, P(*lead, last, None))
+
+            return jax.tree.map(qsh, node)
+        return NamedSharding(mesh, base)
+
+    def moments(tree):
+        return jax.tree.map(one, param_specs_tree, tree,
+                            is_leaf=lambda x: isinstance(x, mapi.ParamSpec))
+
+    return {
+        "m": moments(opt_sds["m"]),
+        "v": moments(opt_sds["v"]),
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, quantised_opt=True):
+    """Returns (fn, args_sds, in_shardings, meta)."""
+    cfg = configs.get_config(arch_id, "full")
+    shape = configs.SHAPES[shape_name]
+    if shape.kind in ("prefill", "decode"):
+        # serving posture: bf16 weights (quantised-weight serving is the
+        # perf-iteration path — see kernels/ and EXPERIMENTS §Perf)
+        cfg = cfg.replace(param_dtype="bfloat16")
+    fam = mapi.get_family(cfg.family)
+    rules = rules_for(shape, cfg, mesh)
+
+    pspecs = fam.param_specs(cfg)
+    params_sds = mapi.specs_to_sds(pspecs)
+    params_sh = shardings_for_specs(pspecs, mesh, rules)
+
+    batch_pspecs = configs.input_specs(cfg, shape)
+    batch_sds = mapi.specs_to_sds(batch_pspecs)
+    batch_sh = _batch_shardings(batch_pspecs, mesh, rules)
+
+    meta = {
+        "arch": arch_id, "shape": shape_name, "kind": shape.kind,
+        "mesh": dict(mesh.shape), "n_devices": mesh.devices.size,
+        "n_params": mapi.count_params(pspecs),
+    }
+
+    if shape.kind == "train":
+        acfg = AdamConfig(quantised_state=quantised_opt)
+        tcfg = TrainConfig(steps=1, lr=1e-4, grad_clip=1.0)
+        step = make_train_step(cfg, acfg, tcfg, lambda s: 1e-4)
+        opt_sds = jax.eval_shape(lambda p: adam_init(p, acfg), params_sds)
+        opt_sh = _opt_shardings(pspecs, opt_sds, mesh, rules)
+        state_sds = {"params": params_sds, "opt": opt_sds}
+        state_sh = {"params": params_sh, "opt": opt_sh}
+        return (step, (state_sds, batch_sds), (state_sh, batch_sh), meta)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return fam.prefill(params, batch, cfg)
+        return (fn, (params_sds, batch_sds), (params_sh, batch_sh), meta)
+
+    # decode
+    sspecs = fam.decode_state_specs(cfg, shape.batch, shape.seq)
+    state_sds = mapi.specs_to_sds(sspecs)
+    state_sh = shardings_for_specs(sspecs, mesh, rules)
+
+    def fn(params, state, batch):
+        return fam.decode_step(params, state, batch, cfg)
+
+    return (fn, (params_sds, state_sds, batch_sds),
+            (params_sh, state_sh, batch_sh), meta)
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "results/dryrun", quantised_opt: bool = True,
+             force: bool = False) -> dict:
+    mesh_tag = "pod512" if multi_pod else "pod256"
+    os.makedirs(os.path.join(out_dir, mesh_tag), exist_ok=True)
+    out_path = os.path.join(out_dir, mesh_tag, f"{arch_id}__{shape_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = configs.get_config(arch_id, "full")
+    shape = configs.SHAPES[shape_name]
+    ok, reason = configs.applicable(cfg, shape_name)
+    if not ok:
+        rec = {"arch": arch_id, "shape": shape_name, "status": "skipped",
+               "reason": reason}
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        from repro.models.layers import (set_activation_sharding,
+                                         set_ep_mesh, set_head_axis)
+        rules = rules_for(shape, cfg, mesh)
+        set_head_axis("model")
+        batch_opts = rules.get("batch", [None])[0]
+        # sequence parallelism between blocks for train/prefill (halves the
+        # saved-activation footprint; §Perf iteration 8)
+        seq_axis = "model" if shape.kind in ("train", "prefill") else None
+        if batch_opts is None or shape.batch == 1:
+            axes = ()
+            set_activation_sharding(None, seq_axis)
+        else:
+            axes = ((batch_opts,) if isinstance(batch_opts, str)
+                    else tuple(batch_opts))
+            axes = tuple(a for a in axes if a in mesh.shape
+                         and shape.batch % mesh.shape[a] == 0)
+            set_activation_sharding(axes or None, seq_axis)
+        if cfg.n_experts:
+            set_ep_mesh(mesh, axes, "model")
+        fn, args_sds, in_sh, meta = build_cell(arch_id, shape_name, mesh,
+                                               quantised_opt)
+        # donate the state (train: params+opt; decode: caches) — aliasing is
+        # how real deployments avoid 2x state memory
+        donate = (0,) if shape.kind == "train" else \
+                 ((1,) if shape.kind == "decode" else ())
+        with mesh:
+            out_sh = None
+            if shape.kind == "train":
+                out_sh = (in_sh[0], None)      # state', metrics
+            elif shape.kind == "decode":
+                out_sh = (None, in_sh[1])      # logits, state'
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=donate).lower(*args_sds)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+        set_activation_sharding(None)
+        set_ep_mesh(None, ())
+        set_head_axis(None)
+        n_dev = mesh.devices.size
+        coll = analysis.parse_collective_bytes(hlo, n_dev)
+        fam = mapi.get_family(cfg.family)
+        analytic_param_bytes = analysis.analytic_bytes_per_device(
+            fam.param_specs(cfg), mesh, rules)
+        rec = {
+            **meta,
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "hlo_dot_flops_per_device": analysis.parse_hlo_dot_stats(hlo)[0],
+            "hlo_dot_bytes_per_device": analysis.parse_hlo_dot_stats(hlo)[1],
+            "hlo_bytes_per_device": analysis.parse_hlo_memory_bytes(hlo),
+            "xla_flops_per_device_bodies_once": float(ca.get("flops", -1)),
+            "xla_bytes_per_device_bodies_once": float(
+                ca.get("bytes accessed", -1)),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            },
+            "analytic_param_bytes_per_device": analytic_param_bytes,
+            "collective_bytes_per_device": coll,
+            "model_flops_total": analysis.model_flops(cfg, shape),
+            "while_trips": analysis.while_trip_counts(hlo),
+            "hlo_ops": analysis.count_hlo_ops(hlo),
+        }
+    except Exception as e:  # record the failure — these are bugs to fix
+        from repro.models.layers import (set_activation_sharding,
+                                         set_ep_mesh, set_head_axis)
+        set_activation_sharding(None)
+        set_ep_mesh(None, ())
+        set_head_axis(None)
+        rec = {"arch": arch_id, "shape": shape_name, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--f32-opt", action="store_true",
+                    help="use f32 Adam moments instead of 8-bit")
+    args = ap.parse_args()
+
+    cells = []
+    archs = configs.ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(configs.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        tag = f"[{'512' if mp else '256'}] {a:24s} {s:12s}"
+        t0 = time.time()
+        rec = run_cell(a, s, mp, out_dir=args.out,
+                       quantised_opt=not args.f32_opt, force=args.force)
+        dt = time.time() - t0
+        if rec["status"] == "ok":
+            mem_gb = (rec["memory"]["argument_bytes"]
+                      + rec["memory"]["temp_bytes"]) / 2**30
+            print(f"{tag} OK    {dt:6.1f}s  "
+                  f"flops/dev={rec['hlo_dot_flops_per_device']:.3e}  "
+                  f"mem/dev={mem_gb:.2f}GiB  "
+                  f"coll/dev={rec['collective_bytes_per_device'].get('total', 0):.3e}B")
+        elif rec["status"] == "skipped":
+            print(f"{tag} SKIP  ({rec['reason'][:60]})")
+        else:
+            failures += 1
+            print(f"{tag} FAIL  {rec['error'][:120]}")
+    print(f"\n{failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

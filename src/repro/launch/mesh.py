@@ -1,0 +1,159 @@
+"""Production mesh construction + logical→physical sharding rules.
+
+Mesh: (16, 16) = 256 chips per pod ("data", "model"); multi-pod adds a
+leading "pod" axis: (2, 16, 16) = 512 chips. Importing this module never
+touches jax device state — ``make_production_mesh`` is a function.
+
+Logical axes (annotated on every ParamSpec in the model zoo) map to mesh
+axes through ordered candidate lists with divisibility-aware fallback:
+a dim that cannot shard evenly on its first candidate tries the next and
+ultimately replicates (e.g. kv_heads=8 on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisOption = Union[str, Tuple[str, ...]]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Tiny mesh over however many (host) devices exist — for tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# Ordered candidates per logical axis. Tuples mean "use these mesh axes
+# jointly" (e.g. batch over pod×data).
+RuleSet = Dict[str, Sequence[AxisOption]]
+
+TRAIN_RULES: RuleSet = {
+    "batch": [("pod", "data"), "data"],
+    "fsdp": [("pod", "data"), "data"],       # ZeRO-3-style parameter shard
+    "vocab": ["model"],
+    "heads": ["model"],
+    "heads_flat": ["model"],                  # flattened H*hd projections
+    "kv_heads": ["model"],                    # falls back to replicate (kv=8)
+    "mlp": ["model"],
+    "experts": ["model", "data"],             # EP; uneven E falls to data
+    "seq": [None],
+    "seq_kv": [None],
+    "layers": [None],
+    "groups": [None],
+}
+
+DECODE_RULES: RuleSet = {
+    **TRAIN_RULES,
+    "fsdp": ["data", ("pod", "data")],        # weights sharded for bandwidth
+    "batch": [("pod", "data"), "data"],
+    "seq_kv": [None],
+}
+
+# decode variant for GQA archs whose kv_heads don't divide the model axis:
+# shard the KV cache on its *sequence* dim instead (flash-decode partial
+# softmax; XLA inserts the small combine collectives). 16× cache memory win
+# vs replication. (§Perf iteration 3.)
+DECODE_RULES_SEQKV: RuleSet = {
+    **DECODE_RULES,
+    "kv_heads": [None],
+    "seq_kv": ["model"],
+}
+
+
+def decode_rules_for(n_kv_heads: int, mesh: Mesh) -> RuleSet:
+    if n_kv_heads % mesh.shape.get("model", 1) == 0:
+        return DECODE_RULES
+    return DECODE_RULES_SEQKV
+
+# long-context decode (batch=1): context parallelism — KV sequence over the
+# data axis, heads over model; pod replicates for throughput.
+LONG_DECODE_RULES: RuleSet = {
+    **TRAIN_RULES,
+    "batch": [None],
+    "fsdp": [None],                           # params replicated data-wise…
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "seq_kv": [("pod", "data"), "data"],      # the context-parallel axis
+}
+
+RULES_BY_KIND = {
+    "train": TRAIN_RULES,
+    "prefill": TRAIN_RULES,
+    "decode": DECODE_RULES,
+    "long_decode": LONG_DECODE_RULES,
+}
+
+
+def _axes_size(mesh: Mesh, opt: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in opt]))
+
+
+# NOTE on uneven dims: GSPMD supports padded uneven sharding via
+# with_sharding_constraint *inside* jit, but jit in_shardings requires
+# divisibility. Argument shardings (built here) therefore fall back to
+# replication; non-divisible attention-head compute is sharded unevenly via
+# internal activation constraints (repro.models.layers.set_head_axis —
+# §Perf iteration 2).
+
+
+def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int],
+             mesh: Mesh, rules: RuleSet) -> P:
+    """Build an (argument-safe) PartitionSpec honouring divisibility and
+    no-axis-reuse, with ordered fallback per logical axis."""
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        chosen: Optional[Tuple[str, ...]] = None
+        if ax is not None:
+            for opt in rules.get(ax, [None]):
+                if opt is None:
+                    break
+                opt_t = (opt,) if isinstance(opt, str) else tuple(opt)
+                if any(a not in mesh.shape for a in opt_t):
+                    continue
+                if any(a in used for a in opt_t):
+                    continue
+                if dim % _axes_size(mesh, opt_t) != 0:
+                    continue
+                chosen = opt_t
+                break
+        if chosen is None:
+            parts.append(None)
+        else:
+            used.update(chosen)
+            parts.append(chosen[0] if len(chosen) == 1 else chosen)
+    return P(*parts)
+
+
+def shardings_for_specs(spec_tree, mesh: Mesh, rules: RuleSet):
+    """tree[ParamSpec] -> tree[NamedSharding]."""
+    from repro.models.api import ParamSpec
+
+    def one(s: ParamSpec):
+        return NamedSharding(mesh, spec_for(s.axes, s.shape, mesh, rules))
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def describe_sharding(spec_tree, mesh: Mesh, rules: RuleSet) -> str:
+    from repro.models.api import ParamSpec
+
+    lines = []
+    flat = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))[0]
+    for path, s in flat:
+        ps = spec_for(s.axes, s.shape, mesh, rules)
+        lines.append(f"{jax.tree_util.keystr(path):60s} {str(s.shape):28s}"
+                     f" {ps}")
+    return "\n".join(lines)

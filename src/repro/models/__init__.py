@@ -1,0 +1,14 @@
+"""repro.models — the architecture zoo (pure-JAX pytree models).
+
+Families: transformer (dense/MoE/GQA/local:global), rwkv6, zamba2 (hybrid),
+whisper (enc-dec), internvl (VLM). All register into ``api.get_family``.
+"""
+from . import api, layers  # noqa: F401
+from . import transformer, rwkv6, zamba2, whisper, internvl  # noqa: F401
+from .api import (ModelConfig, ModelFamily, ParamSpec, count_params,
+                  get_family, init_from_specs, specs_to_sds)
+
+__all__ = [
+    "api", "layers", "ModelConfig", "ModelFamily", "ParamSpec",
+    "count_params", "get_family", "init_from_specs", "specs_to_sds",
+]

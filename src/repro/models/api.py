@@ -1,0 +1,184 @@
+"""Model API: configs, parameter specs with logical sharding axes, and the
+Model protocol every architecture implements.
+
+Parameters are plain pytrees (no flax). Each leaf is described by a
+``ParamSpec(shape, dtype, axes)`` where ``axes`` names a logical mesh axis
+per dimension; ``repro.launch.mesh`` maps logical → physical axes with
+divisibility-aware fallback. ``param_specs`` never allocates — it is the
+basis of the multi-pod dry-run (ShapeDtypeStruct stand-ins).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis names used across the zoo:
+#   batch, seq, seq_kv      activations / caches
+#   vocab, fsdp, heads, kv_heads, head_dim, mlp, experts, layers, groups
+#   conv, state             ssm internals
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+    @property
+    def numel(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "transformer"   # transformer | rwkv6 | zamba2 | whisper | internvl
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 1024
+    # --- MoE ---
+    n_experts: int = 0            # 0 -> dense
+    experts_per_token: int = 1
+    n_shared_experts: int = 0
+    d_expert: int = 0             # 0 -> d_ff
+    capacity_factor: float = 1.25
+    # --- attention pattern ---
+    window: int = 0               # sliding-window size for local layers
+    local_global_pattern: Tuple[int, ...] = ()  # e.g. (5, 1): 5 local : 1 global
+    qk_norm: bool = False
+    # --- ssm / hybrid ---
+    ssm_state: int = 0
+    d_inner: int = 0              # 0 -> 2 * d_model
+    conv_kernel: int = 4
+    attn_every: int = 0           # zamba2: shared attn period
+    # --- enc-dec (whisper) ---
+    n_enc_layers: int = 0
+    enc_seq: int = 1500
+    # --- vlm (internvl) ---
+    n_vis_tokens: int = 0
+    # --- misc ---
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"       # compute dtype
+    param_dtype: str = "float32"  # master dtype
+    kv_dtype: str = ""            # KV-cache storage dtype ("" = dtype);
+                                  # "float8_e4m3fn" halves decode cache
+    attn_chunk: int = 1024        # flash-attention KV chunk
+    linear_chunk: int = 32        # WKV/SSD block-parallel chunk (0 = scan)
+    remat: str = "full"           # none | full | dots
+    # moe dispatch implementation: "sort" (capacity, EP-friendly) | "dense"
+    moe_impl: str = "sort"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def dff_expert(self) -> int:
+        return self.d_expert or self.d_ff
+
+    @property
+    def dinner(self) -> int:
+        return self.d_inner or 2 * self.d_model
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def window_pattern(self) -> np.ndarray:
+        """Per-layer sliding-window sizes; 0 = global attention."""
+        if not self.local_global_pattern:
+            return np.zeros(self.n_layers, np.int32)
+        nl, ng = self.local_global_pattern
+        unit = [self.window] * nl + [0] * ng
+        reps = (self.n_layers + len(unit) - 1) // len(unit)
+        return np.asarray((unit * reps)[: self.n_layers], np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_FAMILIES: Dict[str, "ModelFamily"] = {}
+
+
+@dataclass
+class ModelFamily:
+    name: str
+    param_specs: Callable           # (cfg) -> tree[ParamSpec]
+    init: Callable                  # (rng, cfg) -> params
+    apply: Callable                 # (params, batch, cfg) -> logits
+    # decoding (None for encoder-only):
+    decode_state_specs: Callable = None  # (cfg, batch, kv_len) -> tree[ParamSpec]
+    decode_step: Callable = None    # (params, state, batch, cfg) -> (logits, state)
+    prefill: Callable = None        # (params, batch, cfg) -> (logits, state)
+
+
+def register_family(fam: ModelFamily):
+    _FAMILIES[fam.name] = fam
+    return fam
+
+
+def get_family(name: str) -> ModelFamily:
+    if name not in _FAMILIES:
+        # import side-effect registration
+        from . import transformer, rwkv6, zamba2, whisper, internvl  # noqa
+    return _FAMILIES[name]
+
+
+# ---------------------------------------------------------------------------
+# Spec utilities
+# ---------------------------------------------------------------------------
+
+def specs_to_sds(specs):
+    return jax.tree.map(lambda s: s.sds(), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_from_specs(rng, specs, scale_rule=None):
+    """Materialise parameters: truncated-normal fan-in init for >=2-D, zeros
+    for biases, ones for norm gains (axes == ('*norm*',))."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    rngs = jax.random.split(rng, len(flat))
+    leaves = []
+    for (path, spec), r in zip(flat, rngs):
+        name = jax.tree_util.keystr(path)
+        if "norm" in name or name.endswith("gain']"):
+            leaves.append(jnp.ones(spec.shape, spec.dtype))
+        elif "bias" in name or spec.numel == 0:
+            leaves.append(jnp.zeros(spec.shape, spec.dtype))
+        elif len(spec.shape) >= 2:
+            if "embed" in name:
+                std = 0.02
+            else:  # fan_in = numel / fan_out(last dim)
+                fan_in = spec.numel // max(spec.shape[-1], 1)
+                std = 1.0 / np.sqrt(max(fan_in, 1))
+            if scale_rule:
+                std = scale_rule(name, spec, std)
+            x = jax.random.truncated_normal(r, -3, 3, spec.shape) * std
+            leaves.append(x.astype(spec.dtype))
+        else:
+            leaves.append(jnp.zeros(spec.shape, spec.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def count_params(specs) -> int:
+    return sum(s.numel for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        if isinstance(s, ParamSpec))

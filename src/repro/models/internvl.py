@@ -1,0 +1,69 @@
+"""InternVL2-26B-shaped VLM (arXiv:2404.16821): InternViT frontend STUB +
+InternLM2-20B backbone.
+
+Per the assignment, the modality frontend is a stub: ``input_specs`` provides
+precomputed patch embeddings (B, n_vis_tokens, d_vit). The model owns the
+MLP projector (the real InternVL2 "mlp1") — quantisable like any other
+tensor — and prepends projected visual tokens to the text sequence. The
+backbone is the unified transformer (GQA kv=8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .api import ModelConfig, ModelFamily, ParamSpec, register_family
+from . import transformer
+
+D_VIT = 3200  # InternViT-6B hidden size
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    specs = transformer.param_specs(cfg)
+    pd = cfg.param_dtype
+    specs["vis_norm"] = ParamSpec((D_VIT,), (None,), pd)
+    specs["vis_proj1"] = ParamSpec((D_VIT, cfg.d_model), ("fsdp", None), pd)
+    specs["vis_proj2"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                   ("fsdp", None), pd)
+    return specs
+
+
+def _project_vis(params, vis, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    from .layers import rms_norm
+    h = rms_norm(vis.astype(dt), params["vis_norm"], cfg.norm_eps)
+    h = jnp.einsum("bnd,de->bne", h, params["vis_proj1"].astype(dt))
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bne,ef->bnf", h, params["vis_proj2"].astype(dt))
+
+
+def apply(params, batch, cfg: ModelConfig):
+    """batch: {"tokens": (B, T_text), "vis": (B, n_vis, D_VIT)}."""
+    vis_embed = _project_vis(params, batch["vis"], cfg)
+    inner = {"tokens": batch["tokens"], "vis_embed": vis_embed}
+    return transformer.apply(params, inner, cfg)
+
+
+def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int):
+    return transformer.decode_state_specs(cfg, batch_size, kv_len)
+
+
+def decode_step(params, state, batch, cfg: ModelConfig):
+    # after prefill the visual prefix lives in the KV cache; decode is textual
+    return transformer.decode_step(params, state, batch, cfg)
+
+
+def init(rng, cfg: ModelConfig):
+    from .api import init_from_specs
+    return init_from_specs(rng, param_specs(cfg))
+
+
+register_family(ModelFamily(
+    name="internvl",
+    param_specs=param_specs,
+    init=init,
+    apply=apply,
+    decode_state_specs=decode_state_specs,
+    decode_step=decode_step,
+    prefill=apply,
+))

@@ -1,0 +1,451 @@
+"""Shared neural-net layers: RMSNorm, RoPE, flash-style chunked GQA
+attention (global + sliding window), SwiGLU MLP and sort-based MoE dispatch.
+
+All functions are pure JAX, pjit-friendly (no host callbacks), and written so
+XLA SPMD can shard: heads/mlp/experts dims map to the "model" mesh axis,
+batch to ("pod","data").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+# Activation sharding constraint, set by the launcher (dryrun/train drivers).
+# XLA SPMD propagates parameter shardings well, but scan-carried activations
+# (and their saved-for-backward stacks) need explicit constraints or the
+# partitioner may replicate them — 16× memory on the production mesh.
+_ACT_BATCH_AXES = None   # e.g. ("pod", "data") or ("data",)
+_ACT_SEQ_AXIS = None     # sequence parallelism: shard T between blocks
+                         # (Megatron-SP — turns the residual-stream f32
+                         # all-reduces into bf16 AG/RS pairs)
+
+
+def set_activation_sharding(batch_axes, seq_axis=None):
+    """batch_axes: tuple of mesh axis names for the batch dim, or None.
+    seq_axis: optional mesh axis for sequence parallelism between blocks."""
+    global _ACT_BATCH_AXES, _ACT_SEQ_AXIS
+    _ACT_BATCH_AXES = tuple(batch_axes) if batch_axes else None
+    _ACT_SEQ_AXIS = seq_axis
+
+
+def constrain_act(x):
+    """Constrain a (batch, seq, ...) activation between blocks."""
+    if _ACT_BATCH_AXES is None and _ACT_SEQ_AXIS is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    ax = None
+    if _ACT_BATCH_AXES:
+        ax = (_ACT_BATCH_AXES[0] if len(_ACT_BATCH_AXES) == 1
+              else _ACT_BATCH_AXES)
+    seq = _ACT_SEQ_AXIS if (x.ndim >= 3 and _ACT_SEQ_AXIS is not None
+                            and x.shape[1] % 16 == 0) else None
+    spec = P(ax, seq, *([None] * (x.ndim - 2))) if x.ndim >= 2 \
+        else P(ax)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except ValueError:   # no mesh in context (plain CPU tests)
+        return x
+
+
+# Head-dim sharding for attention activations. jit arguments must shard
+# evenly, so weights with head counts not divisible by the model axis (e.g.
+# llama4's 40 heads on 16) replicate — but GSPMD allows *uneven padded*
+# sharding through with_sharding_constraint, so we pin (B, T, H, hd)
+# activations to the model axis here and the attention FLOPs spread across
+# all chips regardless of divisibility.
+_HEAD_AXIS = None
+
+
+def set_head_axis(axis):
+    global _HEAD_AXIS
+    _HEAD_AXIS = axis
+
+
+def constrain_heads(x):
+    """x: (B, T, H, hd) — shard H on the model axis (uneven OK)."""
+    if _HEAD_AXIS is None or x.shape[-2] <= 1:
+        return x
+    from jax.sharding import PartitionSpec as P
+    bax = None
+    if _ACT_BATCH_AXES:
+        bax = (_ACT_BATCH_AXES[0] if len(_ACT_BATCH_AXES) == 1
+               else _ACT_BATCH_AXES)
+    spec = P(bax, *([None] * (x.ndim - 3)), _HEAD_AXIS, None)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except ValueError:
+        return x
+
+
+def rms_norm(x, gain, eps: float = 1e-5, plus_one: bool = False):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    g = gain.astype(jnp.float32)
+    if plus_one:
+        g = g + 1.0
+    return (y * g).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., T, n, hd); positions: (..., T)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., T, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray   # (D, H, hd)
+    wk: jnp.ndarray   # (D, K, hd)
+    wv: jnp.ndarray   # (D, K, hd)
+    wo: jnp.ndarray   # (H, hd, D)
+    q_norm: Optional[jnp.ndarray] = None  # (hd,)
+    k_norm: Optional[jnp.ndarray] = None
+
+
+def qkv_project(x, p: AttnParams, positions, cfg, rope_on: bool = True):
+    dt = x.dtype
+    q = jnp.einsum("btd,dnh->btnh", x, p.wq.astype(dt))
+    k = jnp.einsum("btd,dnh->btnh", x, p.wk.astype(dt))
+    v = jnp.einsum("btd,dnh->btnh", x, p.wv.astype(dt))
+    if cfg.qk_norm and p.q_norm is not None:
+        q = rms_norm(q, p.q_norm, cfg.norm_eps)
+        k = rms_norm(k, p.k_norm, cfg.norm_eps)
+    if rope_on:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return constrain_heads(q), constrain_heads(k), constrain_heads(v)
+
+
+def flash_attention(q, k, v, q_positions, k_positions, *, causal: bool = True,
+                    window: jnp.ndarray | int = 0, chunk: int = 1024,
+                    k_valid_len=None):
+    """Chunked online-softmax attention (memory O(Tq·chunk), never
+    materialises the full score matrix — required for the 32k cells).
+
+    q: (B, Tq, H, hd) with H = K·G;  k, v: (B, Tk, K, hd)
+    window: 0 = global; >0 = sliding window (only keys within `window`).
+            May be a traced scalar (per-layer pattern scanning).
+    k_valid_len: optional (B,) or scalar count of valid keys (padding mask).
+    """
+    B, Tq, H, hd = q.shape
+    Tk, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Tq, K, G, hd)
+    scale = hd ** -0.5
+
+    chunk = min(chunk, Tk)
+    pad = (-Tk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad), constant_values=2**30)
+    n_chunks = (Tk + pad) // chunk
+    ks = k.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    kpos = k_positions.reshape(n_chunks, chunk)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, kp = inputs
+        s = jnp.einsum("btkgh,bskh->btkgs", qg, kc.astype(qg.dtype)) * scale
+        s = s.astype(jnp.float32)
+        mask = jnp.ones((Tq, chunk), bool)
+        if causal:
+            mask &= q_positions[:, None] >= kp[None, :]
+        mask &= jnp.where(window > 0,
+                          q_positions[:, None] - kp[None, :] < window, True)
+        if k_valid_len is not None:
+            mask &= (kp < k_valid_len)[None, :]
+        mask &= (kp < 2**30)[None, :]  # padding
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "btkgs,bskh->btkgh", p.astype(vc.dtype), vc).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Tq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Tq, K, G), jnp.float32)
+    a0 = jnp.zeros((B, Tq, K, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kpos))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, q_position, *, window=0,
+                     kv_positions=None):
+    """Single-token attention against a KV cache (no chunking needed: the
+    score tensor is (B, H, S) which is small for decode).
+
+    q: (B, 1, H, hd); caches: (B, S, K, hd); q_position: scalar current pos.
+    """
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(qg.dtype))
+    s = s.astype(jnp.float32) * hd ** -0.5
+    if kv_positions is None:
+        kv_positions = jnp.arange(S)
+    mask = kv_positions <= q_position
+    mask &= jnp.where(window > 0, q_position - kv_positions < window, True)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attn_block(x, p: AttnParams, positions, cfg, window=0):
+    """Full training/prefill attention block (pre-norm residual handled by
+    the caller)."""
+    q, k, v = qkv_project(x, p, positions, cfg)
+    o = flash_attention(q, k, v, positions, positions, causal=True,
+                        window=window, chunk=cfg.attn_chunk)
+    o = constrain_heads(o)
+    return jnp.einsum("btnh,nhd->btd", o, p.wo.astype(o.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+class MlpParams(NamedTuple):
+    w_gate: jnp.ndarray  # (D, F)
+    w_up: jnp.ndarray    # (D, F)
+    w_down: jnp.ndarray  # (F, D)
+
+
+def swiglu(x, p: MlpParams):
+    dt = x.dtype
+    g = jnp.einsum("btd,df->btf", x, p.w_gate.astype(dt))
+    u = jnp.einsum("btd,df->btf", x, p.w_up.astype(dt))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("btf,fd->btd", h, p.w_down.astype(dt))
+
+
+def gelu_mlp(x, w_in, w_out):
+    dt = x.dtype
+    h = jax.nn.gelu(jnp.einsum("btd,df->btf", x, w_in.astype(dt)))
+    return jnp.einsum("btf,fd->btd", h, w_out.astype(dt))
+
+
+class MoeParams(NamedTuple):
+    w_router: jnp.ndarray   # (D, E)
+    w_gate: jnp.ndarray     # (E, D, F)
+    w_up: jnp.ndarray       # (E, D, F)
+    w_down: jnp.ndarray     # (E, F, D)
+    shared: Optional[MlpParams] = None
+
+
+# Expert-parallel execution context, set by the launcher (like activation
+# sharding). When set, moe_block runs under shard_map: experts are owned by
+# model-axis shards, activations (replicated across the model axis, sharded
+# by batch on the data axes) are routed locally, and expert outputs combine
+# with one psum over the model axis — the same collective cost as a dense
+# tensor-parallel MLP, versus the global-sort dispatch XLA cannot partition.
+_EP_MESH = None  # (mesh, batch_axes tuple, model_axis)
+
+
+def set_ep_mesh(mesh, batch_axes, model_axis="model"):
+    global _EP_MESH
+    _EP_MESH = (mesh, tuple(batch_axes) if batch_axes else (),
+                model_axis) if mesh is not None else None
+
+
+def moe_block(x, p: MoeParams, cfg):
+    if _EP_MESH is not None:
+        return moe_block_ep(x, p, cfg)
+    return _moe_block_local(x, p, cfg)
+
+
+def _moe_block_local(x, p: MoeParams, cfg):
+    """Top-k routed experts with sort-based capacity dispatch (TPU-native:
+    gather/scatter + dense per-expert einsums; expert axis shards to the
+    'model' mesh axis for EP). Dropped tokens (over capacity) fall through
+    to the residual (plus shared experts if configured)."""
+    B, T, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    N = B * T
+    xt = x.reshape(N, D)
+    logits = jnp.einsum("nd,de->ne", xt, p.w_router.astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, choice = jax.lax.top_k(probs, k)          # (N, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)          # renormalise
+    expert_flat = choice.reshape(-1)                     # (N·k,)
+    cap = int(np.ceil(cfg.capacity_factor * k * N / E))
+    cap = max(cap, 4)
+
+    # rank of each dispatch within its expert (stable sort by expert id)
+    order = jnp.argsort(expert_flat, stable=True)
+    sorted_e = expert_flat[order]
+    # start offset of each expert group in the sorted order
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank_sorted = jnp.arange(N * k) - starts[sorted_e]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    keep = rank < cap
+    safe_rank = jnp.where(keep, rank, cap - 1)
+
+    # dispatch: (E, cap, D)
+    tok_idx = jnp.arange(N * k) // k
+    contrib = jnp.where(keep[:, None], xt[tok_idx], 0.0)
+    buf = jnp.zeros((E, cap, D), x.dtype).at[expert_flat, safe_rank].add(contrib)
+
+    # per-expert SwiGLU
+    dt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", buf, p.w_gate.astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p.w_up.astype(dt))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, p.w_down.astype(dt))
+
+    # combine: gather back and weight by the (renormalised) gate
+    y_tok = y[expert_flat, safe_rank]                    # (N·k, D)
+    w = jnp.where(keep, gate_vals.reshape(-1), 0.0).astype(x.dtype)
+    out = jnp.zeros((N, D), x.dtype).at[tok_idx].add(y_tok * w[:, None])
+
+    aux = router_load_balancing_loss(probs, choice, E)
+    out = out.reshape(B, T, D)
+    if p.shared is not None:
+        out = out + swiglu(x, p.shared)
+    return out, aux
+
+
+def moe_block_ep(x, p: MoeParams, cfg):
+    """shard_map expert parallelism. Expert weights are padded to a multiple
+    of the model-axis size (dummy experts get -inf router logits) and owned
+    by model shards; every shard routes its (replicated-over-model) local
+    tokens to its own experts; outputs psum over the model axis."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        from jax import shard_map
+    except ImportError:  # older jax
+        from jax.experimental.shard_map import shard_map
+
+    mesh, batch_axes, model_ax = _EP_MESH
+    M = mesh.shape[model_ax]
+    E, k = cfg.n_experts, cfg.experts_per_token
+    E_pad = ((E + M - 1) // M) * M
+    # cast to compute dtype BEFORE shard_map: the E/D resharding then moves
+    # bf16, not f32 master weights (2x less reshard traffic)
+    cast = lambda w: w.astype(x.dtype)
+    if E_pad != E:
+        padw = lambda w: jnp.pad(cast(w),
+                                 ((0, E_pad - E),) + ((0, 0),) * (w.ndim - 1))
+        w_gate, w_up, w_down = padw(p.w_gate), padw(p.w_up), padw(p.w_down)
+        w_router = jnp.pad(cast(p.w_router), ((0, 0), (0, E_pad - E)))
+    else:
+        w_gate, w_up, w_down, w_router = (cast(p.w_gate), cast(p.w_up),
+                                          cast(p.w_down), cast(p.w_router))
+
+    B, T, D = x.shape
+    bax = batch_axes[0] if len(batch_axes) == 1 else (batch_axes or None)
+    x_spec = P(bax, None, None) if batch_axes else P(None, None, None)
+
+    def local(xl, wr, wg, wu, wd):
+        """xl: (B_loc, T, D); wg/wu/wd: (E_loc, D, F); wr: (D, E_pad)."""
+        Bl, Tl, Dl = xl.shape
+        N = Bl * Tl
+        E_loc = wg.shape[0]
+        xt = xl.reshape(N, Dl)
+        logits = jnp.einsum("nd,de->ne", xt, wr.astype(xl.dtype))
+        logits = logits.astype(jnp.float32)
+        if E_pad != E:  # mask dummy experts
+            mask = (jnp.arange(E_pad) < E)
+            logits = jnp.where(mask[None, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, choice = jax.lax.top_k(probs, k)              # (N, k)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+        # my expert slice: [m*E_loc, (m+1)*E_loc)
+        m_idx = jax.lax.axis_index(model_ax)
+        e_lo = m_idx * E_loc
+        flat_choice = choice.reshape(-1)                         # (N*k,)
+        local_e = flat_choice - e_lo
+        mine = (local_e >= 0) & (local_e < E_loc)
+        local_e = jnp.clip(local_e, 0, E_loc - 1)
+        cap = max(int(np.ceil(cfg.capacity_factor * k * N / E)), 4)
+        # rank within local expert via stable sort
+        order = jnp.argsort(jnp.where(mine, local_e, E_loc), stable=True)
+        sorted_e = jnp.where(mine, local_e, E_loc)[order]
+        starts = jnp.searchsorted(sorted_e, jnp.arange(E_loc), side="left")
+        rank_sorted = jnp.arange(N * k) - starts[jnp.clip(sorted_e, 0, E_loc - 1)]
+        rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+        keep = mine & (rank < cap)
+        safe_rank = jnp.where(keep, rank, cap - 1)
+        tok_idx = jnp.arange(N * k) // k
+        contrib = jnp.where(keep[:, None], xt[tok_idx], 0.0)
+        buf = jnp.zeros((E_loc, cap, Dl), xl.dtype).at[
+            local_e, safe_rank].add(contrib)
+        dt = xl.dtype
+        g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(dt))
+        u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(dt))
+        h = jax.nn.silu(g) * u
+        y = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))
+        y_tok = y[local_e, safe_rank]
+        w = jnp.where(keep, gate_vals.reshape(-1), 0.0).astype(dt)
+        out = jnp.zeros((N, Dl), dt).at[tok_idx].add(y_tok * w[:, None])
+        out = jax.lax.psum(out, model_ax)                        # combine
+        aux = router_load_balancing_loss(probs[:, :E], choice, E)
+        aux = jax.lax.pmean(aux, model_ax)
+        for ax in batch_axes:
+            aux = jax.lax.pmean(aux, ax)
+        return out.reshape(Bl, Tl, Dl), aux
+
+    try:
+        smap = shard_map(
+            local, mesh=mesh,
+            in_specs=(x_spec, P(None, None), P(model_ax, None, None),
+                      P(model_ax, None, None), P(model_ax, None, None)),
+            out_specs=(x_spec, P()),
+            check_vma=False)
+    except TypeError:  # older kwarg name
+        smap = shard_map(
+            local, mesh=mesh,
+            in_specs=(x_spec, P(None, None), P(model_ax, None, None),
+                      P(model_ax, None, None), P(model_ax, None, None)),
+            out_specs=(x_spec, P()),
+            check_rep=False)
+    out, aux = smap(x, w_router, w_gate, w_up, w_down)
+    if p.shared is not None:
+        out = out + swiglu(x, p.shared)
+    return out, aux
+
+
+def router_load_balancing_loss(probs, choice, E):
+    """Switch-style auxiliary loss: E * Σ_e f_e · P_e."""
+    onehot = jax.nn.one_hot(choice[:, 0], E, dtype=jnp.float32)
+    f = onehot.mean(0)
+    pbar = probs.mean(0)
+    return E * jnp.sum(f * pbar)
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv over time. x: (B, T, C); w: (Kw, C).
+    With ``state`` ((B, Kw-1, C)) performs streaming decode; returns
+    (y, new_state)."""
+    Kw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (Kw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(Kw))
+    new_state = xp[:, -(Kw - 1):, :] if Kw > 1 else None
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,302 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with token-shift
+mixing and **data-dependent decay** in the WKV linear-attention state.
+
+Per head (dim hd), state S ∈ R^{hd×hd}:
+    y_t[j] = Σ_i r_t[i] · (S[i,j] + u[i]·k_t[i]·v_t[j])
+    S[i,j] ← w_t[i]·S[i,j] + k_t[i]·v_t[j],   w_t = exp(-exp(w0 + LoRA(x_t)))
+
+Training uses a lax.scan over time (a chunked matmul-parallel form is a
+recorded §Perf candidate); decode carries (shift, S) state — O(1)/token, so
+the long_500k cell is natively supported.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .api import ModelConfig, ModelFamily, ParamSpec, register_family
+from .layers import rms_norm
+
+LORA_R = 64
+HEAD_DIM = 64
+
+
+def _n_heads(cfg):
+    return cfg.d_model // HEAD_DIM
+
+
+def layer_param_specs(cfg: ModelConfig) -> dict:
+    D, F, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    H, hd = _n_heads(cfg), HEAD_DIM
+    pd = cfg.param_dtype
+    lx = lambda *s: ("layers",) + tuple(s)
+    return {
+        "norm_tm": ParamSpec((L, D), lx(None), pd),
+        "norm_cm": ParamSpec((L, D), lx(None), pd),
+        # token-shift lerp coefficients
+        "mu_r": ParamSpec((L, D), lx(None), pd),
+        "mu_k": ParamSpec((L, D), lx(None), pd),
+        "mu_v": ParamSpec((L, D), lx(None), pd),
+        "mu_g": ParamSpec((L, D), lx(None), pd),
+        "mu_w": ParamSpec((L, D), lx(None), pd),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(xw A) B))
+        "w0": ParamSpec((L, D), lx(None), pd),
+        "w_lora_a": ParamSpec((L, D, LORA_R), lx("fsdp", None), pd),
+        "w_lora_b": ParamSpec((L, LORA_R, D), lx(None, "fsdp"), pd),
+        "bonus_u": ParamSpec((L, H, hd), lx("heads", None), pd),
+        # projections
+        "wr": ParamSpec((L, D, D), lx("fsdp", "heads_flat"), pd),
+        "wk": ParamSpec((L, D, D), lx("fsdp", "heads_flat"), pd),
+        "wv": ParamSpec((L, D, D), lx("fsdp", "heads_flat"), pd),
+        "wg": ParamSpec((L, D, D), lx("fsdp", "heads_flat"), pd),
+        "wo": ParamSpec((L, D, D), lx("heads_flat", "fsdp"), pd),
+        "ln_x": ParamSpec((L, D), lx(None), pd),  # per-head group norm gain
+        # channel mix
+        "mu_ck": ParamSpec((L, D), lx(None), pd),
+        "mu_cr": ParamSpec((L, D), lx(None), pd),
+        "wck": ParamSpec((L, D, F), lx("fsdp", "mlp"), pd),
+        "wcv": ParamSpec((L, F, D), lx("mlp", "fsdp"), pd),
+        "wcr": ParamSpec((L, D, D), lx("fsdp", None), pd),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    pd = cfg.param_dtype
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "fsdp"), pd),
+        "layers": layer_param_specs(cfg),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), pd),
+        "unembed": ParamSpec((cfg.d_model, cfg.vocab), ("fsdp", "vocab"), pd),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` at t=0). x: (B, T, D)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _group_norm(y, gain, eps):
+    """Per-head LayerNorm over hd. y: (B, T, H, hd); gain: (D,)."""
+    m = jnp.mean(y, axis=-1, keepdims=True)
+    v = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - m) * jax.lax.rsqrt(v + eps)
+    B, T, H, hd = y.shape
+    return yn.reshape(B, T, -1) * gain.astype(y.dtype)
+
+
+def wkv_scan(r, k, v, w, u, s0=None):
+    """The WKV recurrence, one step at a time. r/k/v/w: (B, T, H, hd);
+    u: (H, hd). Returns (y (B,T,H,hd), final state (B,H,hd,hd))."""
+    B, T, H, hd = r.shape
+    s_init = (jnp.zeros((B, H, hd, hd), jnp.float32) if s0 is None
+              else s0.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None].astype(jnp.float32) * vt[..., None, :].astype(jnp.float32)
+        att = s + u[None, :, :, None].astype(jnp.float32) * kv
+        y = jnp.einsum("bhi,bhij->bhj", rt.astype(jnp.float32), att)
+        s_new = wt[..., :, None].astype(jnp.float32) * s + kv
+        return s_new, y
+
+    xs = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s_init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_fin
+
+
+_LOG_CLAMP = -20.0  # per-chunk cumulative log-decay floor (numerics)
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 32):
+    """Block-parallel WKV (matmul form — the TPU-native formulation).
+
+    Within a chunk of length C, with cumulative decays W_t = Π_{s≤t} w_s:
+        y_t = r_t·(decay(·)·k_s v_sᵀ masked s<t) + r_t·(u⊙k_t) v_tᵀ
+              + (r_t⊙W_{t-1})·S_prev
+        S ← (W_C)⊙S_prev + Σ_s (k_s·W_C/W_s) v_sᵀ
+    so the recurrent state is touched once per CHUNK (O(T/C) HBM traffic
+    instead of O(T)), and all inner work is (C×C)/(C×hd) matmuls for the
+    MXU. Exactly equal to wkv_scan (tested); decays are clamped in log
+    space at -20 per chunk for f32 safety.
+    """
+    B, T, H, hd = r.shape
+    assert T % chunk == 0, (T, chunk)
+    C = chunk
+    n = T // C
+    f32 = jnp.float32
+    rs = r.astype(f32).reshape(B, n, C, H, hd)
+    ks = k.astype(f32).reshape(B, n, C, H, hd)
+    vs = v.astype(f32).reshape(B, n, C, H, hd)
+    logw = jnp.clip(jnp.log(jnp.maximum(w.astype(f32), 1e-38)),
+                    _LOG_CLAMP, 0.0).reshape(B, n, C, H, hd)
+    s_init = (jnp.zeros((B, H, hd, hd), f32) if s0 is None
+              else s0.astype(f32))
+    u32 = u.astype(f32)
+
+    # cumulative within chunk: cw_t = Σ_{s<=t} log w_s  (inclusive)
+    cw = jnp.cumsum(logw, axis=2)
+    cw = jnp.maximum(cw, _LOG_CLAMP)
+    w_tot = jnp.exp(cw[:, :, -1])                    # (B,n,H,hd)
+    # decay applied to incoming state at step t: Π_{s<t} w_s = cw_{t-1}
+    cw_excl = jnp.concatenate(
+        [jnp.zeros_like(cw[:, :, :1]), cw[:, :, :-1]], axis=2)
+    r_dec = rs * jnp.exp(cw_excl)                    # r_t ⊙ W_{t-1}
+    k_inv = ks * jnp.exp(-cw)                        # k_s / W_s
+    k_rem = ks * jnp.exp(cw[:, :, -1:] - cw)         # k_s · W_C/W_s
+
+    # intra-chunk attention (state-free, fully parallel over chunks):
+    # scores[t,s] = Σ_i r_dec[t,i]·k_inv[s,i], causal strictly below diag
+    scores = jnp.einsum("bnthi,bnshi->bnhts", r_dec, k_inv)
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bnhts,bnshj->bnthj", scores, vs)
+    # diagonal (current-token) bonus term: r_t·(u⊙k_t) v_t
+    coef = jnp.einsum("bnthi,hi->bnth", rs * ks, u32)
+    y_intra = y_intra + coef[..., None] * vs
+
+    # inter-chunk: only the state crosses chunk boundaries (scan over n)
+    def chunk_step(S, inp):
+        r_dec_c, k_rem_c, v_c, w_tot_c = inp   # (B,C,H,hd)… (B,H,hd)
+        y_state = jnp.einsum("bthi,bhij->bthj", r_dec_c, S)
+        S_new = w_tot_c[..., :, None] * S + \
+            jnp.einsum("bthi,bthj->bhij", k_rem_c, v_c)
+        return S_new, y_state
+
+    xs = (jnp.moveaxis(r_dec, 1, 0), jnp.moveaxis(k_rem, 1, 0),
+          jnp.moveaxis(vs, 1, 0), jnp.moveaxis(w_tot, 1, 0))
+    s_fin, y_state = jax.lax.scan(chunk_step, s_init, xs)
+    y = y_intra + jnp.moveaxis(y_state, 0, 1)
+    return y.reshape(B, T, H, hd).astype(r.dtype), s_fin
+
+
+def time_mix(x, lp, cfg, last_x=None, s0=None):
+    """Returns (out, (new_last_x, new_state))."""
+    B, T, D = x.shape
+    H, hd = _n_heads(cfg), HEAD_DIM
+    dt = x.dtype
+    xs = _shift(x, last_x)
+
+    def lerp(mu):
+        return x + (xs - x) * mu.astype(dt)
+
+    r = jnp.einsum("btd,de->bte", lerp(lp["mu_r"]), lp["wr"].astype(dt))
+    k = jnp.einsum("btd,de->bte", lerp(lp["mu_k"]), lp["wk"].astype(dt))
+    v = jnp.einsum("btd,de->bte", lerp(lp["mu_v"]), lp["wv"].astype(dt))
+    g = jnp.einsum("btd,de->bte", lerp(lp["mu_g"]), lp["wg"].astype(dt))
+    # data-dependent decay (the Finch contribution)
+    w_lora = jnp.einsum("btr,rd->btd",
+                        jnp.tanh(jnp.einsum("btd,dr->btr", lerp(lp["mu_w"]),
+                                            lp["w_lora_a"].astype(dt))),
+                        lp["w_lora_b"].astype(dt))
+    w = jnp.exp(-jnp.exp((lp["w0"].astype(jnp.float32) +
+                          w_lora.astype(jnp.float32))))
+    hsplit = lambda a: a.reshape(B, T, H, hd)
+    ck = cfg.linear_chunk
+    use_chunked = (s0 is None and ck and T > ck and T % ck == 0)
+    wkv = (lambda *a: wkv_chunked(*a, chunk=ck)) if use_chunked else wkv_scan
+    y, s_fin = wkv(hsplit(r), hsplit(k), hsplit(v),
+                   hsplit(w.astype(dt)), lp["bonus_u"], s0)
+    y = _group_norm(y, lp["ln_x"], cfg.norm_eps)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("btd,de->bte", y.astype(dt), lp["wo"].astype(dt))
+    return out, (x[:, -1], s_fin)
+
+
+def channel_mix(x, lp, cfg, last_x=None):
+    dt = x.dtype
+    xs = _shift(x, last_x)
+    xk = x + (xs - x) * lp["mu_ck"].astype(dt)
+    xr = x + (xs - x) * lp["mu_cr"].astype(dt)
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, lp["wcr"].astype(dt)))
+    k = jnp.square(jax.nn.relu(
+        jnp.einsum("btd,df->btf", xk, lp["wck"].astype(dt))))
+    out = r * jnp.einsum("btf,fd->btd", k, lp["wcv"].astype(dt))
+    return out, x[:, -1]
+
+
+def apply(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    def body(x, lp):
+        from .layers import constrain_act
+        x = constrain_act(x)
+        h, _ = time_mix(rms_norm(x, lp["norm_tm"], cfg.norm_eps), lp, cfg)
+        x = x + h
+        h, _ = channel_mix(rms_norm(x, lp["norm_cm"], cfg.norm_eps), lp, cfg)
+        return constrain_act(x + h), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(dt))
+    return logits.astype(jnp.float32)
+
+
+# ------------------------------------------------------------------ decode
+
+def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
+    """Recurrent state: O(1) in sequence length (kv_len unused — that is the
+    point of an SSM for the long_500k cell)."""
+    D, L = cfg.d_model, cfg.n_layers
+    H, hd = _n_heads(cfg), HEAD_DIM
+    cd = cfg.dtype
+    return {
+        "tm_x": ParamSpec((L, batch_size, D), ("layers", "batch", None), cd),
+        "cm_x": ParamSpec((L, batch_size, D), ("layers", "batch", None), cd),
+        "wkv": ParamSpec((L, batch_size, H, hd, hd),
+                         ("layers", "batch", "heads", None, None), "float32"),
+        "pos": ParamSpec((), (), "int32"),
+    }
+
+
+def decode_step(params, state, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]  # (B, 1)
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    def body(x, inputs):
+        lp, tm_x, cm_x, s = inputs
+        h, (tm_new, s_new) = time_mix(
+            rms_norm(x, lp["norm_tm"], cfg.norm_eps), lp, cfg,
+            last_x=tm_x.astype(dt), s0=s)
+        x = x + h
+        h, cm_new = channel_mix(
+            rms_norm(x, lp["norm_cm"], cfg.norm_eps), lp, cfg,
+            last_x=cm_x.astype(dt))
+        return x + h, (tm_new.astype(tm_x.dtype), cm_new.astype(cm_x.dtype),
+                       s_new)
+
+    x, (tm, cm, wkv) = jax.lax.scan(
+        body, x, (params["layers"], state["tm_x"], state["cm_x"],
+                  state["wkv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(dt))
+    new_state = {"tm_x": tm, "cm_x": cm, "wkv": wkv, "pos": state["pos"] + 1}
+    return logits.astype(jnp.float32), new_state
+
+
+def init(rng, cfg: ModelConfig):
+    from .api import init_from_specs
+    params = init_from_specs(rng, param_specs(cfg))
+    # decay bias init: spread per-channel decays (standard RWKV init)
+    L, D = cfg.n_layers, cfg.d_model
+    import numpy as np
+    decay = -5.0 + 8.0 * (np.arange(D) / max(D - 1, 1)) ** 3.0
+    params["layers"]["w0"] = jnp.tile(jnp.asarray(decay, jnp.float32), (L, 1))
+    for mu in ["mu_r", "mu_k", "mu_v", "mu_g", "mu_w", "mu_ck", "mu_cr"]:
+        params["layers"][mu] = jnp.full((L, D), 0.5, jnp.float32)
+    return params
+
+
+register_family(ModelFamily(
+    name="rwkv6",
+    param_specs=param_specs,
+    init=init,
+    apply=apply,
+    decode_state_specs=decode_state_specs,
+    decode_step=decode_step,
+    prefill=apply,
+))

@@ -1,0 +1,204 @@
+"""Whisper-large-v3-shaped encoder-decoder (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, enc_seq, D). Encoder layers are bidirectional
+attention + GELU MLP; decoder layers add cross-attention over encoder output.
+LayerNorm (with mean subtraction) per the original; decoder positions use
+RoPE (TPU-stack adaptation of the learned 448-position table — noted in
+DESIGN.md, required for the mechanical 32k decode cells).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .api import ModelConfig, ModelFamily, ParamSpec, register_family
+from .layers import (AttnParams, decode_attention, flash_attention,
+                     gelu_mlp, qkv_project)
+
+
+def layer_norm(x, gain, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    m = jnp.mean(x32, axis=-1, keepdims=True)
+    v = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - m) * jax.lax.rsqrt(v + eps) *
+            gain.astype(jnp.float32)).astype(x.dtype)
+
+
+def _attn_specs(L, D, H, hd, pd, prefix=""):
+    lx = lambda *s: ("layers",) + tuple(s)
+    return {
+        prefix + "wq": ParamSpec((L, D, H, hd), lx("fsdp", "heads", None), pd),
+        prefix + "wk": ParamSpec((L, D, H, hd), lx("fsdp", "heads", None), pd),
+        prefix + "wv": ParamSpec((L, D, H, hd), lx("fsdp", "heads", None), pd),
+        prefix + "wo": ParamSpec((L, H, hd, D), lx("heads", None, "fsdp"), pd),
+        prefix + "norm": ParamSpec((L, D), lx(None), pd),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    D, H, hd, F, V = (cfg.d_model, cfg.n_heads, cfg.hd, cfg.d_ff, cfg.vocab)
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    pd = cfg.param_dtype
+    lx = lambda *s: ("layers",) + tuple(s)
+
+    def stack(L):
+        return {
+            **_attn_specs(L, D, H, hd, pd, "self_"),
+            "mlp_norm": ParamSpec((L, D), lx(None), pd),
+            "w_in": ParamSpec((L, D, F), lx("fsdp", "mlp"), pd),
+            "w_out": ParamSpec((L, F, D), lx("mlp", "fsdp"), pd),
+        }
+
+    enc = stack(Le)
+    dec = stack(Ld)
+    dec.update(_attn_specs(Ld, D, H, hd, pd, "cross_"))
+    return {
+        "embed": ParamSpec((V, D), ("vocab", "fsdp"), pd),
+        "enc": enc,
+        "dec": dec,
+        "enc_norm": ParamSpec((D,), (None,), pd),
+        "dec_norm": ParamSpec((D,), (None,), pd),
+    }
+
+
+def _enc_layer(x, lp, positions, cfg):
+    ap = AttnParams(lp["self_wq"], lp["self_wk"], lp["self_wv"], lp["self_wo"])
+    h = layer_norm(x, lp["self_norm"], cfg.norm_eps)
+    q, k, v = qkv_project(h, ap, positions, cfg, rope_on=False)
+    o = flash_attention(q, k, v, positions, positions, causal=False,
+                        chunk=cfg.attn_chunk)
+    x = x + jnp.einsum("btnh,nhd->btd", o, ap.wo.astype(o.dtype))
+    h = layer_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    return x + gelu_mlp(h, lp["w_in"], lp["w_out"])
+
+
+def encode(params, frames, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt)
+    positions = jnp.arange(x.shape[1])
+
+    from .layers import constrain_act
+
+    def body(x, lp):
+        return constrain_act(_enc_layer(constrain_act(x), lp, positions,
+                                        cfg)), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    return layer_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_layer(x, enc_out, lp, positions, enc_positions, cfg):
+    dt = x.dtype
+    # causal self attention (RoPE)
+    ap = AttnParams(lp["self_wq"], lp["self_wk"], lp["self_wv"], lp["self_wo"])
+    h = layer_norm(x, lp["self_norm"], cfg.norm_eps)
+    q, k, v = qkv_project(h, ap, positions, cfg, rope_on=True)
+    o = flash_attention(q, k, v, positions, positions, causal=True,
+                        chunk=cfg.attn_chunk)
+    x = x + jnp.einsum("btnh,nhd->btd", o, ap.wo.astype(dt))
+    # cross attention
+    cp = AttnParams(lp["cross_wq"], lp["cross_wk"], lp["cross_wv"],
+                    lp["cross_wo"])
+    h = layer_norm(x, lp["cross_norm"], cfg.norm_eps)
+    qc = jnp.einsum("btd,dnh->btnh", h, cp.wq.astype(dt))
+    kc = jnp.einsum("btd,dnh->btnh", enc_out, cp.wk.astype(dt))
+    vc = jnp.einsum("btd,dnh->btnh", enc_out, cp.wv.astype(dt))
+    oc = flash_attention(qc, kc, vc, positions, enc_positions, causal=False,
+                         chunk=cfg.attn_chunk)
+    x = x + jnp.einsum("btnh,nhd->btd", oc, cp.wo.astype(dt))
+    h = layer_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    return x + gelu_mlp(h, lp["w_in"], lp["w_out"])
+
+
+def apply(params, batch, cfg: ModelConfig):
+    """batch: {"frames": (B, enc_seq, D), "tokens": (B, T)} → logits."""
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = jnp.arange(tokens.shape[1])
+    enc_positions = jnp.arange(enc_out.shape[1])
+
+    from .layers import constrain_act
+
+    def body(x, lp):
+        return constrain_act(_dec_layer(constrain_act(x), enc_out, lp,
+                                        positions, enc_positions, cfg)), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    x = layer_norm(x, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(dt))  # tied
+    return logits.astype(jnp.float32)
+
+
+def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
+    H, hd, Ld = cfg.n_heads, cfg.hd, cfg.n_layers
+    cd = cfg.kv_dtype or cfg.dtype
+    return {
+        "k": ParamSpec((Ld, batch_size, kv_len, H, hd),
+                       ("layers", "batch", "seq_kv", "heads", None), cd),
+        "v": ParamSpec((Ld, batch_size, kv_len, H, hd),
+                       ("layers", "batch", "seq_kv", "heads", None), cd),
+        # cross-attention KV, precomputed from the encoder at prefill
+        "xk": ParamSpec((Ld, batch_size, cfg.enc_seq, H, hd),
+                        ("layers", "batch", None, "heads", None), cd),
+        "xv": ParamSpec((Ld, batch_size, cfg.enc_seq, H, hd),
+                        ("layers", "batch", None, "heads", None), cd),
+        "pos": ParamSpec((), (), "int32"),
+    }
+
+
+def decode_step(params, state, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]  # (B, 1)
+    dt = jnp.dtype(cfg.dtype)
+    pos = state["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = pos[None] + jnp.zeros((1,), jnp.int32)
+
+    def body(x, inputs):
+        lp, kc, vc, xk, xv = inputs
+        ap = AttnParams(lp["self_wq"], lp["self_wk"], lp["self_wv"],
+                        lp["self_wo"])
+        h = layer_norm(x, lp["self_norm"], cfg.norm_eps)
+        q, k_new, v_new = qkv_project(h, ap, positions, cfg, rope_on=True)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype),
+                                                 pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype),
+                                                 pos, axis=1)
+        o = decode_attention(q, kc, vc, pos)
+        x = x + jnp.einsum("btnh,nhd->btd", o, ap.wo.astype(o.dtype))
+        cp = AttnParams(lp["cross_wq"], lp["cross_wk"], lp["cross_wv"],
+                        lp["cross_wo"])
+        h = layer_norm(x, lp["cross_norm"], cfg.norm_eps)
+        qc = jnp.einsum("btd,dnh->btnh", h, cp.wq.astype(dt))
+        oc = decode_attention(qc, xk, xv, jnp.int32(2**30))  # all enc visible
+        x = x + jnp.einsum("btnh,nhd->btd", oc, cp.wo.astype(dt))
+        h = layer_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + gelu_mlp(h, lp["w_in"], lp["w_out"])
+        return x, (kc, vc)
+
+    x, (k, v) = jax.lax.scan(body, x, (params["dec"], state["k"], state["v"],
+                                       state["xk"], state["xv"]))
+    x = layer_norm(x, params["dec_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(dt))
+    new_state = dict(state, k=k, v=v, pos=pos + 1)
+    return logits.astype(jnp.float32), new_state
+
+
+def init(rng, cfg: ModelConfig):
+    from .api import init_from_specs
+    return init_from_specs(rng, param_specs(cfg))
+
+
+register_family(ModelFamily(
+    name="whisper",
+    param_specs=param_specs,
+    init=init,
+    apply=apply,
+    decode_state_specs=decode_state_specs,
+    decode_step=decode_step,
+    prefill=apply,
+))

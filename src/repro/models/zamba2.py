@@ -1,0 +1,313 @@
+"""Zamba2 (arXiv:2411.15242): Mamba-2 SSM backbone with a **shared**
+full-attention transformer block applied every ``attn_every`` layers.
+
+Mamba-2 layer (SSD, scalar-decay-per-head form), state h ∈ R^{H×hd×N}:
+    h_t = a_t·h_{t-1} + (Δ_t x_t) ⊗ B_t ,   y_t = h_t C_t + D⊙x_t
+with a_t = exp(-exp(A_log)·Δ_t). Training scans groups of ``attn_every``
+Mamba layers then applies the shared attention block — the scan is over
+*groups* so the shared parameters stay un-stacked (true weight sharing).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .api import ModelConfig, ModelFamily, ParamSpec, register_family
+from .layers import (AttnParams, MlpParams, attn_block, causal_conv1d,
+                     decode_attention, qkv_project, rms_norm, swiglu)
+
+SSM_HEAD_DIM = 64
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.dinner
+    H = di // SSM_HEAD_DIM
+    N = cfg.ssm_state or 64
+    return di, H, N
+
+
+def _groups(cfg: ModelConfig):
+    per = cfg.attn_every or 6
+    assert cfg.n_layers % per == 0, "n_layers must divide by attn_every"
+    return cfg.n_layers // per, per
+
+
+def mamba_param_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    di, H, N = _dims(cfg)
+    G, P = _groups(cfg)
+    pd = cfg.param_dtype
+    proj_out = 2 * di + 2 * N + H  # [z, x, B, C, dt]
+    gx = lambda *s: ("groups", "layers") + tuple(s)
+    return {
+        "norm": ParamSpec((G, P, D), gx(None), pd),
+        "in_proj": ParamSpec((G, P, D, proj_out), gx("fsdp", "heads_flat"), pd),
+        "conv_w": ParamSpec((G, P, cfg.conv_kernel, di + 2 * N),
+                            gx(None, None), pd),
+        "A_log": ParamSpec((G, P, H), gx(None), pd),
+        "D_skip": ParamSpec((G, P, H), gx(None), pd),
+        "dt_bias": ParamSpec((G, P, H), gx(None), pd),
+        "gate_norm": ParamSpec((G, P, di), gx(None), pd),
+        "out_proj": ParamSpec((G, P, di, D), gx("heads_flat", "fsdp"), pd),
+    }
+
+
+def shared_block_specs(cfg: ModelConfig) -> dict:
+    """One shared transformer block (attention + SwiGLU)."""
+    D, Hq, hd, F = cfg.d_model, cfg.n_heads, cfg.hd, cfg.d_ff
+    K = cfg.n_kv_heads
+    pd = cfg.param_dtype
+    return {
+        "attn_norm": ParamSpec((D,), (None,), pd),
+        "wq": ParamSpec((D, Hq, hd), ("fsdp", "heads", None), pd),
+        "wk": ParamSpec((D, K, hd), ("fsdp", "kv_heads", None), pd),
+        "wv": ParamSpec((D, K, hd), ("fsdp", "kv_heads", None), pd),
+        "wo": ParamSpec((Hq, hd, D), ("heads", None, "fsdp"), pd),
+        "mlp_norm": ParamSpec((D,), (None,), pd),
+        "w_gate": ParamSpec((D, F), ("fsdp", "mlp"), pd),
+        "w_up": ParamSpec((D, F), ("fsdp", "mlp"), pd),
+        "w_down": ParamSpec((F, D), ("mlp", "fsdp"), pd),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    pd = cfg.param_dtype
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "fsdp"), pd),
+        "mamba": mamba_param_specs(cfg),
+        "shared": shared_block_specs(cfg),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), pd),
+        "unembed": ParamSpec((cfg.d_model, cfg.vocab), ("fsdp", "vocab"), pd),
+    }
+
+
+# ---------------------------------------------------------------- SSD core
+
+def ssd_scan(x, dt, a, Bm, Cm, h0=None):
+    """x: (B,T,H,hd); dt,a: (B,T,H); Bm,Cm: (B,T,N).
+    Returns (y (B,T,H,hd), h_final (B,H,hd,N))."""
+    B, T, H, hd = x.shape
+    N = Bm.shape[-1]
+    h_init = (jnp.zeros((B, H, hd, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, at, bt, ct = inp  # (B,H,hd) (B,H) (B,H) (B,N) (B,N)
+        dx = (dtt[..., None] * xt).astype(jnp.float32)       # (B,H,hd)
+        h = at[..., None, None].astype(jnp.float32) * h + \
+            dx[..., :, None] * bt[:, None, None, :].astype(jnp.float32)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(jnp.float32))
+        return h, y
+
+    xs = jax.tree.map(lambda v: jnp.moveaxis(v, 1, 0), (x, dt, a, Bm, Cm))
+    h_fin, ys = jax.lax.scan(step, h_init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_fin
+
+
+def ssd_chunked(x, dt, a, Bm, Cm, h0=None, chunk: int = 32):
+    """Block-parallel SSD (Mamba-2's matmul form). x: (B,T,H,hd);
+    dt,a: (B,T,H); Bm,Cm: (B,T,N). State is touched once per chunk; all
+    inner work is (C×C)/(C×N) matmuls. Exactly equals ssd_scan (tested;
+    log-decays clamped at -20/chunk for f32)."""
+    B, T, H, hd = x.shape
+    N = Bm.shape[-1]
+    assert T % chunk == 0
+    C = chunk
+    n = T // C
+    f32 = jnp.float32
+    xc = x.astype(f32).reshape(B, n, C, H, hd)
+    dtc = dt.astype(f32).reshape(B, n, C, H)
+    Bc = Bm.astype(f32).reshape(B, n, C, N)
+    Cc = Cm.astype(f32).reshape(B, n, C, N)
+    la = jnp.log(jnp.maximum(a.astype(f32), 1e-38)).reshape(B, n, C, H)
+    ca = jnp.maximum(jnp.cumsum(la, axis=2), -20.0)      # inclusive
+    h_init = (jnp.zeros((B, H, hd, N), f32) if h0 is None
+              else h0.astype(f32))
+
+    # intra-chunk: scores[t,s] = (C_t·B_s)·exp(ca_t − ca_s)·dt_s, s ≤ t
+    CB = jnp.einsum("bntN,bnsN->bnts", Cc, Bc)
+    Et = jnp.exp(ca).transpose(0, 1, 3, 2)               # (B,n,H,C)
+    Esi = (jnp.exp(-ca) * dtc).transpose(0, 1, 3, 2)
+    scores = CB[:, :, None] * Et[..., :, None] * Esi[..., None, :]
+    mask = jnp.tril(jnp.ones((C, C), bool))              # inclusive diag
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bnhts,bnshp->bnthp", scores, xc)
+
+    # inter-chunk state scan
+    a_tot = jnp.exp(ca[:, :, -1])                        # (B,n,H)
+    k_rem = jnp.exp(ca[:, :, -1:, :] - ca) * dtc         # (B,n,C,H)
+
+    def chunk_step(h, inp):
+        Cc_c, ca_c, x_c, B_c, krem_c, atot_c = inp
+        y_state = jnp.einsum("btN,bhpN->bthp", Cc_c, h) * \
+            jnp.exp(ca_c)[..., None]
+        h_new = atot_c[:, :, None, None] * h + \
+            jnp.einsum("bth,bthp,btN->bhpN", krem_c, x_c, B_c)
+        return h_new, y_state
+
+    xs = tuple(jnp.moveaxis(v, 1, 0) for v in
+               (Cc, ca, xc, Bc, k_rem, a_tot))
+    h_fin, y_state = jax.lax.scan(chunk_step, h_init, xs)
+    y = y_intra + jnp.moveaxis(y_state, 0, 1)
+    return y.reshape(B, T, H, hd).astype(x.dtype), h_fin
+
+
+def mamba_layer(x, lp, cfg, conv_state=None, ssm_state=None):
+    """Returns (out, (new_conv_state, new_ssm_state))."""
+    Bsz, T, D = x.shape
+    di, H, N = _dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("btd,de->bte", x, lp["in_proj"].astype(dt_))
+    z, xc, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    xbc = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    xbc, conv_new = causal_conv1d(xbc, lp["conv_w"].astype(dt_), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xc, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    xh = xc.reshape(Bsz, T, H, SSM_HEAD_DIM)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         lp["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-jnp.exp(lp["A_log"].astype(jnp.float32)) * dt)
+    ck = cfg.linear_chunk
+    use_chunked = (ssm_state is None and ck and T > ck and T % ck == 0)
+    ssd = (lambda *args: ssd_chunked(*args, chunk=ck)) if use_chunked \
+        else ssd_scan
+    y, ssm_new = ssd(xh, dt.astype(dt_), a.astype(dt_), Bm, Cm, ssm_state)
+    y = y + lp["D_skip"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(Bsz, T, di)
+    # gated RMSNorm (Mamba-2): norm(y) * silu(z)
+    y = rms_norm(y, lp["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y.astype(dt_), lp["out_proj"].astype(dt_))
+    return out, (conv_new, ssm_new)
+
+
+def _shared_attn_block(x, sp, positions, cfg):
+    h = rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+    ap = AttnParams(sp["wq"], sp["wk"], sp["wv"], sp["wo"])
+    x = x + attn_block(h, ap, positions, cfg, window=0)
+    h = rms_norm(x, sp["mlp_norm"], cfg.norm_eps)
+    return x + swiglu(h, MlpParams(sp["w_gate"], sp["w_up"], sp["w_down"]))
+
+
+def apply(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    dt_ = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt_)
+    positions = jnp.arange(tokens.shape[1])
+    shared = params["shared"]
+
+    def group_body(x, gp):
+        from .layers import constrain_act
+
+        def layer_body(x, lp):
+            x = constrain_act(x)
+            h, _ = mamba_layer(rms_norm(x, lp["norm"], cfg.norm_eps), lp, cfg)
+            return constrain_act(x + h), None
+
+        x, _ = jax.lax.scan(layer_body, x, gp)
+        x = _shared_attn_block(x, shared, positions, cfg)
+        return constrain_act(x), None
+
+    body_fn = jax.checkpoint(group_body) if cfg.remat == "full" else group_body
+    x, _ = jax.lax.scan(body_fn, x, params["mamba"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(dt_))
+    return logits.astype(jnp.float32)
+
+
+# ------------------------------------------------------------------ decode
+
+def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
+    di, H, N = _dims(cfg)
+    G, P = _groups(cfg)
+    K, hd = cfg.n_kv_heads, cfg.hd
+    cd = cfg.kv_dtype or cfg.dtype
+    return {
+        "conv": ParamSpec((G, P, batch_size, cfg.conv_kernel - 1, di + 2 * N),
+                          ("groups", "layers", "batch", None, None),
+                          cfg.dtype),
+        "ssm": ParamSpec((G, P, batch_size, H, SSM_HEAD_DIM, N),
+                         ("groups", "layers", "batch", "heads", None, None),
+                         "float32"),
+        # shared attention KV cache: one per application point (G of them)
+        "k": ParamSpec((G, batch_size, kv_len, K, hd),
+                       ("groups", "batch", "seq_kv", "kv_heads", None), cd),
+        "v": ParamSpec((G, batch_size, kv_len, K, hd),
+                       ("groups", "batch", "seq_kv", "kv_heads", None), cd),
+        "pos": ParamSpec((), (), "int32"),
+    }
+
+
+def decode_step(params, state, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    dt_ = jnp.dtype(cfg.dtype)
+    pos = state["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt_)
+    positions = pos[None] + jnp.zeros((1,), jnp.int32)
+    shared = params["shared"]
+
+    def shared_decode(x, kc, vc):
+        h = rms_norm(x, shared["attn_norm"], cfg.norm_eps)
+        ap = AttnParams(shared["wq"], shared["wk"], shared["wv"], shared["wo"])
+        q, k_new, v_new = qkv_project(h, ap, positions, cfg)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k_new.astype(kc.dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v_new.astype(vc.dtype), pos, axis=1)
+        o = decode_attention(q, kc, vc, pos)
+        x = x + jnp.einsum("btnh,nhd->btd", o, shared["wo"].astype(o.dtype))
+        h = rms_norm(x, shared["mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(h, MlpParams(shared["w_gate"], shared["w_up"],
+                                    shared["w_down"]))
+        return x, kc, vc
+
+    def group_body(x, inputs):
+        gp, conv_s, ssm_s, kc, vc = inputs
+
+        def layer_body(x, inp):
+            lp, cs, ss = inp
+            h, (cs_new, ss_new) = mamba_layer(
+                rms_norm(x, lp["norm"], cfg.norm_eps), lp, cfg,
+                conv_state=cs, ssm_state=ss)
+            return x + h, (cs_new.astype(cs.dtype), ss_new)
+
+        x, (conv_new, ssm_new) = jax.lax.scan(layer_body, x,
+                                              (gp, conv_s, ssm_s))
+        x, kc, vc = shared_decode(x, kc, vc)
+        return x, (conv_new, ssm_new, kc, vc)
+
+    x, (conv, ssm, k, v) = jax.lax.scan(
+        group_body, x, (params["mamba"], state["conv"], state["ssm"],
+                        state["k"], state["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(dt_))
+    new_state = {"conv": conv, "ssm": ssm, "k": k, "v": v, "pos": pos + 1}
+    return logits.astype(jnp.float32), new_state
+
+
+def init(rng, cfg: ModelConfig):
+    from .api import init_from_specs
+    params = init_from_specs(rng, param_specs(cfg))
+    G, P = _groups(cfg)
+    di, H, N = _dims(cfg)
+    rng_np = np.random.default_rng(0)
+    params["mamba"]["A_log"] = jnp.asarray(
+        np.log(rng_np.uniform(1, 16, (G, P, H))), jnp.float32)
+    params["mamba"]["dt_bias"] = jnp.asarray(
+        np.log(np.expm1(rng_np.uniform(1e-3, 0.1, (G, P, H)))), jnp.float32)
+    params["mamba"]["D_skip"] = jnp.ones((G, P, H), jnp.float32)
+    params["mamba"]["conv_w"] = jnp.asarray(
+        rng_np.normal(0, 0.1, (G, P, cfg.conv_kernel, di + 2 * N)), jnp.float32)
+    return params
+
+
+register_family(ModelFamily(
+    name="zamba2",
+    param_specs=param_specs,
+    init=init,
+    apply=apply,
+    decode_state_specs=decode_state_specs,
+    decode_step=decode_step,
+    prefill=apply,
+))

@@ -1,0 +1,5 @@
+from . import context_parallel, engine  # noqa: F401
+from .engine import Request, ServeEngine, greedy_generate
+
+__all__ = ["context_parallel", "engine", "Request", "ServeEngine",
+           "greedy_generate"]

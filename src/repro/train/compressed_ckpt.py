@@ -1,0 +1,121 @@
+"""Entropy-coded checkpoints (§2.3 as a framework feature).
+
+A serving checkpoint where each tensor is quantised on a uniform grid at a
+target entropy and the code stream is **Huffman-packed to actual bytes** —
+the paper's optimal entropy-constrained format as storage. At 4 bits target
+this is ~4.05/16 of the bf16 checkpoint, ~25 % smaller again than the packed
+block-absmax int4 checkpoint (whose codes don't compress).
+
+Format per tensor (inside one .npz):
+    <name>.__payload   uint8 Huffman bitstream
+    <name>.__lengths   per-symbol code lengths (canonical code rebuild)
+    <name>.__symbols   symbol values (grid indices, offset-shifted)
+    <name>.__meta      [n_symbols_total, delta*2^40, shape...]
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compress import build_huffman, code_histogram, fit_grid_delta
+from repro.core.element import uniform_grid
+from repro.core.plan import _flat_with_paths, quantisable
+
+_DELTA_SCALE = 2.0 ** 40
+
+
+def save_compressed_params(ckpt_dir: str, params, target_bits: float = 4.0,
+                           step: int = 0) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"cstep_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat: dict = {}
+    meta_rows = []
+    for name, x in _flat_with_paths(params):
+        key = name.replace("/", "_")
+        xnp = np.asarray(x, np.float32)
+        if not quantisable(name, x):
+            flat[key] = xnp  # small tensors stored raw
+            continue
+        delta = fit_grid_delta(xnp, target_bits=target_bits)
+        codes = np.asarray(uniform_grid(delta).quantise(jnp.asarray(xnp)))
+        lo = int(codes.min())
+        sym = (codes - lo).astype(np.int64).reshape(-1)
+        hist = np.bincount(sym)
+        hc = build_huffman(hist)
+        payload, n_bits = hc.encode(sym)
+        flat[key + ".__payload"] = np.frombuffer(payload, np.uint8)
+        symbols = np.asarray(sorted(hc.lengths), np.int64)
+        flat[key + ".__symbols"] = symbols
+        flat[key + ".__lengths"] = np.asarray(
+            [hc.lengths[s] for s in symbols], np.int64)
+        flat[key + ".__meta"] = np.asarray(
+            [sym.size, int(delta * _DELTA_SCALE), lo, *xnp.shape], np.int64)
+        meta_rows.append(dict(tensor=name, bits=hc.mean_bits(hist),
+                              numel=int(sym.size)))
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    total_bits = sum(r["bits"] * r["numel"] for r in meta_rows)
+    total_n = sum(r["numel"] for r in meta_rows)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "format": "huffman-grid",
+                   "target_bits": target_bits,
+                   "achieved_bits_per_param": total_bits / max(total_n, 1),
+                   "tensors": meta_rows}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load_compressed_params(path: str, template) -> dict:
+    """Decode back to a pytree shaped like ``template``."""
+    from repro.core.compress import HuffmanCode
+
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    by_key: dict = {}
+    for k in npz.files:
+        if ".__" in k:
+            base, attr = k.rsplit(".__", 1)
+            by_key.setdefault(base, {})[attr] = npz[k]
+        else:
+            by_key[k] = npz[k]
+
+    out_flat = {}
+    for name, x in _flat_with_paths(template):
+        key = name.replace("/", "_")
+        entry = by_key[key]
+        if isinstance(entry, np.ndarray):
+            out_flat[name] = jnp.asarray(entry)
+            continue
+        meta = entry["meta"]
+        n, delta_q, lo = int(meta[0]), int(meta[1]), int(meta[2])
+        shape = tuple(int(d) for d in meta[3:])
+        delta = delta_q / _DELTA_SCALE
+        symbols = entry["symbols"]
+        lengths = entry["lengths"]
+        # rebuild the canonical code
+        lmap = {int(s): int(l) for s, l in zip(symbols, lengths)}
+        codes: dict = {}
+        cur, prev = 0, 0
+        for s, l in sorted(lmap.items(), key=lambda kv: (kv[1], kv[0])):
+            cur <<= l - prev
+            codes[s] = (cur, l)
+            cur += 1
+            prev = l
+        hc = HuffmanCode(lmap, codes)
+        sym = hc.decode(entry["payload"].tobytes(), n)
+        vals = (sym + lo).astype(np.float32) * delta
+        out_flat[name] = jnp.asarray(vals.reshape(shape))
+
+    # rebuild tree
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = [out_flat[jax.tree_util.keystr(p)] for p, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,227 @@
+"""Training loop substrate: loss functions (CE pretraining + full-KL QAT
+distillation per paper §D), jit train-step builder with QAT fake-quant (STE),
+gradient clipping, optional gradient-compression hook, grad accumulation,
+and a fault-tolerant outer loop (checkpoint/restart, retry, heartbeat).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import QuantisationPlan
+from repro.models.api import ModelConfig, get_family
+from .optimizer import AdamConfig, adam_init, adam_update
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 10
+    grad_clip: float = 1.0
+    log_every: int = 10
+    ckpt_every: int = 0           # 0 = disabled
+    ckpt_dir: str = ""
+    seed: int = 0
+    moe_aux_weight: float = 0.01
+    # gradient accumulation: split the global batch into N microbatches,
+    # scanning fwd+bwd per slice — divides the live-activation footprint by
+    # N (how the 405B-class train cells fit HBM)
+    microbatches: int = 1
+    # gradient compression (simulated int8 block all-reduce; see DESIGN.md)
+    grad_compression: Optional[str] = None   # e.g. "babsmax256:int8s"
+
+
+def shift_labels(cfg: ModelConfig, batch, logits):
+    """Align logits with next-token targets; returns (logits, labels, mask)."""
+    tokens = batch["tokens"]
+    if cfg.family == "internvl":
+        # visual prefix produces logits but has no text labels
+        logits = logits[:, cfg.n_vis_tokens:]
+    return logits[:, :-1], tokens[:, 1:], jnp.ones_like(tokens[:, 1:],
+                                                        jnp.float32)
+
+
+def ce_loss(cfg: ModelConfig, logits, batch):
+    lg, labels, mask = shift_labels(cfg, batch, logits)
+    logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def full_kl_loss(ref_logits, logits):
+    """Paper §D QAT objective: full KL(ref ‖ student), mean over positions."""
+    p = jax.nn.log_softmax(ref_logits.astype(jnp.float32), axis=-1)
+    q = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    kl = jnp.sum(jnp.exp(p) * (p - q), axis=-1)
+    return jnp.mean(kl)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def make_train_step(
+    model_cfg: ModelConfig,
+    adam_cfg: AdamConfig,
+    train_cfg: TrainConfig,
+    lr_fn: Callable,
+    qat_plan: Optional[QuantisationPlan] = None,
+    distill: bool = False,
+):
+    """Build the pure train_step(state, batch[, ref_params]) function.
+
+    ``qat_plan``: per-tensor fake-quant with STE is applied to parameters in
+    the forward pass; the scale is recomputed from master params every step
+    and only master params are updated — exactly the paper's §D QAT recipe.
+    ``distill``: loss = full KL against a bf16 reference model (teacher
+    forward inside the step, stop-gradient).
+    """
+    fam = get_family(model_cfg.family)
+    grad_fmt = None
+    if train_cfg.grad_compression:
+        from repro.core import parse_format
+        grad_fmt = parse_format(train_cfg.grad_compression)
+
+    def loss_fn(params, batch, ref_params):
+        p = qat_plan.fake_quant_ste(params) if qat_plan is not None else params
+        logits = fam.apply(p, batch, model_cfg)
+        if distill:
+            ref_logits = jax.lax.stop_gradient(
+                fam.apply(ref_params, batch, model_cfg))
+            loss = full_kl_loss(ref_logits, logits)
+        else:
+            loss = ce_loss(model_cfg, logits, batch)
+        return loss, logits
+
+    def _grads_of(params, batch, ref_params):
+        n_mb = max(train_cfg.microbatches, 1)
+        if n_mb == 1:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, ref_params)
+            return loss, grads
+        # gradient accumulation: scan over microbatch slices of the batch
+        # (leading axis reshaped to (n_mb, B/n_mb, ...)); activations live
+        # only for one slice at a time
+        def resplit(x):
+            b = x.shape[0]
+            assert b % n_mb == 0, (b, n_mb)
+            return x.reshape(n_mb, b // n_mb, *x.shape[1:])
+
+        mb = jax.tree.map(resplit, batch)
+
+        def body(carry, mb_batch):
+            acc, loss_acc = carry
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb_batch, ref_params)
+            acc = jax.tree.map(lambda a, b2: a + b2.astype(jnp.float32),
+                               acc, g)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (gsum, loss_sum), _ = jax.lax.scan(body, (zeros, 0.0), mb)
+        inv = 1.0 / n_mb
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def train_step(state, batch, ref_params=None):
+        params, opt = state["params"], state["opt"]
+        loss, grads = _grads_of(params, batch, ref_params)
+        if grad_fmt is not None:
+            # simulated compressed all-reduce: block-int8 round trip on the
+            # gradient (the collective itself is inserted by SPMD; this
+            # models its payload precision)
+            grads = jax.tree.map(
+                lambda g: grad_fmt.fake_quant(g) if g.ndim >= 2 else g, grads)
+        grads, gnorm = clip_by_global_norm(grads, train_cfg.grad_clip)
+        lr = lr_fn(opt["step"])
+        new_params, new_opt = adam_update(grads, opt, params, lr, adam_cfg)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_state(rng, model_cfg: ModelConfig, adam_cfg: AdamConfig):
+    fam = get_family(model_cfg.family)
+    params = fam.init(rng, model_cfg)
+    return {"params": params, "opt": adam_init(params, adam_cfg)}
+
+
+def train(
+    model_cfg: ModelConfig,
+    train_cfg: TrainConfig,
+    adam_cfg: AdamConfig,
+    batch_fn: Callable[[int], dict],
+    lr_fn=None,
+    qat_plan=None,
+    ref_params=None,
+    state=None,
+    on_step=None,
+):
+    """Fault-tolerant training loop: resumes from the latest checkpoint in
+    ``ckpt_dir``, writes atomic checkpoints, retries transient step failures,
+    emits heartbeats. Returns (state, history)."""
+    from .checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+    from .fault_tolerance import Heartbeat, retry
+
+    from .optimizer import cosine_schedule
+    if lr_fn is None:
+        lr_fn = cosine_schedule(train_cfg.lr, train_cfg.steps,
+                                train_cfg.warmup)
+    step0 = 0
+    if state is None:
+        state = init_state(jax.random.PRNGKey(train_cfg.seed), model_cfg,
+                           adam_cfg)
+        if train_cfg.ckpt_dir:
+            ck = latest_checkpoint(train_cfg.ckpt_dir)
+            if ck is not None:
+                state, meta = restore_checkpoint(ck, template=state)
+                step0 = int(meta["step"])
+
+    train_step = make_train_step(model_cfg, adam_cfg, train_cfg, lr_fn,
+                                 qat_plan=qat_plan,
+                                 distill=ref_params is not None)
+    jit_step = jax.jit(train_step) if ref_params is None else \
+        jax.jit(partial(train_step))
+
+    hb = Heartbeat(train_cfg.ckpt_dir) if train_cfg.ckpt_dir else None
+    history = []
+    t_last = time.time()
+    for step in range(step0, train_cfg.steps):
+        batch = jax.tree.map(jnp.asarray, batch_fn(step))
+
+        def do_step():
+            if ref_params is not None:
+                return jit_step(state, batch, ref_params)
+            return jit_step(state, batch)
+
+        state, metrics = retry(do_step, max_attempts=3)
+        if hb:
+            hb.beat(step)
+        if step % train_cfg.log_every == 0 or step == train_cfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["s_per_step"] = (time.time() - t_last) / max(train_cfg.log_every, 1)
+            t_last = time.time()
+            history.append(m)
+            if on_step:
+                on_step(m)
+        if (train_cfg.ckpt_every and train_cfg.ckpt_dir
+                and (step + 1) % train_cfg.ckpt_every == 0):
+            save_checkpoint(train_cfg.ckpt_dir, state, step + 1,
+                            meta={"model": model_cfg.name})
+    return state, history

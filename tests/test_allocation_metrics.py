@@ -1,0 +1,130 @@
+"""Tests for Eq.-5 bit allocation, top-k KL, Fisher estimation and
+compression accounting."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import allocate_bits, average_bits, heuristic_bits
+from repro.core.metrics import mean_topk_kl, rho, topk_kl
+
+
+def _stats(fishers, rmss=None, numels=None):
+    n = len(fishers)
+    rmss = rmss or [1.0] * n
+    numels = numels or [1024] * n
+    return {f"t{i}": dict(numel=numels[i], rms=rmss[i],
+                          fisher_mean=fishers[i]) for i in range(n)}
+
+
+class TestAllocation:
+    def test_budget_met(self):
+        stats = _stats([1e-6, 1e-4, 1e-2], numels=[1024, 4096, 512])
+        alloc = allocate_bits(stats, 4.0)
+        assert average_bits(alloc, stats) == pytest.approx(4.0, abs=1e-3)
+
+    def test_4x_fisher_is_plus_one_bit(self):
+        """Paper: 4× Fisher ⇒ exactly +1 bit (Eq. 5)."""
+        stats = _stats([1e-4, 4e-4])
+        alloc = allocate_bits(stats, 6.0, b_min=0.0, b_max=32.0)
+        assert alloc["t1"] - alloc["t0"] == pytest.approx(1.0, abs=1e-3)
+
+    def test_2x_rms_is_plus_one_bit(self):
+        stats = _stats([1e-4, 1e-4], rmss=[0.01, 0.02])
+        alloc = allocate_bits(stats, 6.0, b_min=0.0, b_max=32.0)
+        assert alloc["t1"] - alloc["t0"] == pytest.approx(1.0, abs=1e-3)
+
+    def test_clipping_respected_and_budget_rebalanced(self):
+        stats = _stats([1e-12, 1e-2], numels=[1024, 1024])
+        alloc = allocate_bits(stats, 4.0, b_min=2.0, b_max=6.0)
+        assert alloc["t0"] >= 2.0 and alloc["t1"] <= 6.0
+        assert average_bits(alloc, stats) == pytest.approx(4.0, abs=0.02)
+
+    @given(target=st.floats(2.0, 8.0), seed=st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_budget_property(self, target, seed):
+        rng = np.random.default_rng(seed)
+        stats = _stats(list(10.0 ** rng.uniform(-8, -2, 5)),
+                       rmss=list(10.0 ** rng.uniform(-3, 0, 5)),
+                       numels=list(rng.integers(512, 1 << 20, 5)))
+        alloc = allocate_bits(stats, target)
+        assert average_bits(alloc, stats) == pytest.approx(target, abs=0.05)
+
+    def test_heuristic_budget(self):
+        stats = {f"layers[{i}].w": dict(numel=1000, rms=1, fisher_mean=1e-4)
+                 for i in range(8)}
+        stats["embed"] = dict(numel=1000, rms=1, fisher_mean=1e-4)
+        alloc = heuristic_bits(stats, 4.0, n_layers=8)
+        assert average_bits(alloc, stats) == pytest.approx(4.0, abs=1e-6)
+        assert alloc["embed"] > alloc["layers[3].w"]
+        assert alloc["layers[0].w"] > alloc["layers[3].w"]
+
+
+class TestTopkKL:
+    def test_zero_for_identical(self):
+        logits = jnp.asarray(np.random.default_rng(0)
+                             .standard_normal((2, 5, 64)), jnp.float32)
+        kl = topk_kl(logits, logits, k=8)
+        assert float(jnp.max(jnp.abs(kl))) < 1e-5
+
+    def test_nonnegative(self):
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.standard_normal((4, 8, 64)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((4, 8, 64)), jnp.float32)
+        assert float(jnp.min(topk_kl(a, b, k=8))) >= -1e-6
+
+    def test_matches_full_kl_when_k_is_vocab(self):
+        rng = np.random.default_rng(2)
+        a = jnp.asarray(rng.standard_normal((1, 4, 16)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((1, 4, 16)), jnp.float32)
+        kl_top = topk_kl(a, b, k=16)
+        pa = jax.nn.softmax(a); la = jax.nn.log_softmax(a)
+        lb = jax.nn.log_softmax(b)
+        kl_full = jnp.sum(pa * (la - lb), -1)
+        np.testing.assert_allclose(np.asarray(kl_top), np.asarray(kl_full),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_increases_with_perturbation(self):
+        rng = np.random.default_rng(3)
+        a = jnp.asarray(rng.standard_normal((2, 8, 128)), jnp.float32)
+        n = jnp.asarray(rng.standard_normal((2, 8, 128)), jnp.float32)
+        kl_small = float(mean_topk_kl(a, a + 0.01 * n, k=16))
+        kl_big = float(mean_topk_kl(a, a + 0.3 * n, k=16))
+        assert kl_big > kl_small
+
+    def test_rho(self):
+        assert rho(0.1, 4.0) == pytest.approx(0.1 * 256)
+
+
+class TestFisher:
+    def test_sensitive_param_has_higher_fisher(self):
+        """A 2-param logistic model: the param multiplying the big feature
+        must get the larger diagonal Fisher."""
+        from repro.core.fisher import estimate_diag_fisher
+
+        def apply_fn(params, batch):
+            x = batch["x"]  # (B, T, 2)
+            logits = jnp.einsum("btd,dv->btv", x, params["w"])
+            return logits
+
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((8, 16, 2)).astype(np.float32)
+        x[..., 0] *= 5.0  # feature 0 is 5x larger
+        params = {"w": jnp.asarray(rng.standard_normal((2, 4)) * 0.1,
+                                   jnp.float32)}
+        batches = [{"x": jnp.asarray(x)} for _ in range(4)]
+        f = estimate_diag_fisher(apply_fn, params, batches,
+                                 jax.random.PRNGKey(0))
+        fw = np.asarray(f["w"])
+        assert fw[0].mean() > 4 * fw[1].mean()
+
+    def test_two_stage_accumulator(self):
+        from repro.core.fisher import TwoStageAccumulator
+        acc = TwoStageAccumulator({"a": jnp.zeros((4,))}, flush_every=3)
+        for i in range(7):
+            acc.add({"a": jnp.ones((4,))})
+        out = acc.value()
+        np.testing.assert_allclose(out["a"], 7.0)

@@ -1,0 +1,230 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
+(and one decode step) on CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api as mapi
+
+ARCH_IDS = list(configs.ARCHS)
+
+
+def make_batch(cfg, rng, batch=2, seq=32):
+    kt = jax.random.fold_in(rng, 1)
+    if cfg.family == "whisper":
+        return {
+            "frames": jax.random.normal(kt, (batch, cfg.enc_seq, cfg.d_model),
+                                        jnp.float32),
+            "tokens": jax.random.randint(rng, (batch, seq), 0, cfg.vocab),
+        }
+    if cfg.family == "internvl":
+        from repro.models.internvl import D_VIT
+        return {
+            "tokens": jax.random.randint(rng, (batch, seq), 0, cfg.vocab),
+            "vis": jax.random.normal(kt, (batch, cfg.n_vis_tokens, D_VIT),
+                                     jnp.float32),
+        }
+    return {"tokens": jax.random.randint(rng, (batch, seq), 0, cfg.vocab)}
+
+
+def expected_logit_len(cfg, seq):
+    if cfg.family == "internvl":
+        return seq + cfg.n_vis_tokens
+    return seq
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_smoke(arch_id):
+    cfg = configs.get_config(arch_id, "smoke")
+    fam = mapi.get_family(cfg.family)
+    rng = jax.random.PRNGKey(0)
+    params = fam.init(rng, cfg)
+    batch = make_batch(cfg, rng)
+    logits = jax.jit(lambda p, b: fam.apply(p, b, cfg))(params, batch)
+    assert logits.shape == (2, expected_logit_len(cfg, 32), cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch_id}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_smoke(arch_id):
+    cfg = configs.get_config(arch_id, "smoke")
+    fam = mapi.get_family(cfg.family)
+    assert fam.decode_step is not None
+    rng = jax.random.PRNGKey(0)
+    params = fam.init(rng, cfg)
+    B, kv_len = 2, 64
+    state_specs = fam.decode_state_specs(cfg, B, kv_len)
+    state = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), state_specs,
+        is_leaf=lambda x: isinstance(x, mapi.ParamSpec))
+    batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    step = jax.jit(lambda p, s, b: fam.decode_step(p, s, b, cfg))
+    logits, state = step(params, state, batch)
+    logits2, state = step(params, state, batch)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(logits2).all())
+    assert int(state["pos"]) == 2
+
+
+def test_decode_matches_forward_transformer():
+    """Teacher-forcing logits == step-by-step decode logits (uniform cache)."""
+    cfg = configs.get_config("deepseek-7b", "smoke").replace(dtype="float32",
+                                                             param_dtype="float32")
+    fam = mapi.get_family(cfg.family)
+    rng = jax.random.PRNGKey(1)
+    params = fam.init(rng, cfg)
+    T = 8
+    tokens = jax.random.randint(rng, (1, T), 0, cfg.vocab)
+    ref = fam.apply(params, {"tokens": tokens}, cfg)
+
+    state = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        fam.decode_state_specs(cfg, 1, T),
+        is_leaf=lambda x: isinstance(x, mapi.ParamSpec))
+    outs = []
+    for t in range(T):
+        logits, state = fam.decode_step(params, state,
+                                        {"tokens": tokens[:, t:t + 1]}, cfg)
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_forward_rwkv6():
+    cfg = configs.get_config("rwkv6-1.6b", "smoke").replace(
+        dtype="float32", param_dtype="float32")
+    fam = mapi.get_family(cfg.family)
+    rng = jax.random.PRNGKey(2)
+    params = fam.init(rng, cfg)
+    T = 8
+    tokens = jax.random.randint(rng, (1, T), 0, cfg.vocab)
+    ref = fam.apply(params, {"tokens": tokens}, cfg)
+    state = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        fam.decode_state_specs(cfg, 1, T),
+        is_leaf=lambda x: isinstance(x, mapi.ParamSpec))
+    outs = []
+    for t in range(T):
+        logits, state = fam.decode_step(params, state,
+                                        {"tokens": tokens[:, t:t + 1]}, cfg)
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_forward_zamba2():
+    cfg = configs.get_config("zamba2-2.7b", "smoke").replace(
+        dtype="float32", param_dtype="float32")
+    fam = mapi.get_family(cfg.family)
+    rng = jax.random.PRNGKey(3)
+    params = fam.init(rng, cfg)
+    T = 8
+    tokens = jax.random.randint(rng, (1, T), 0, cfg.vocab)
+    ref = fam.apply(params, {"tokens": tokens}, cfg)
+    state = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        fam.decode_state_specs(cfg, 1, T),
+        is_leaf=lambda x: isinstance(x, mapi.ParamSpec))
+    outs = []
+    for t in range(T):
+        logits, state = fam.decode_step(params, state,
+                                        {"tokens": tokens[:, t:t + 1]}, cfg)
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_local_window_masks_differ_from_global():
+    """gemma3 smoke: local window must actually restrict attention."""
+    cfg = configs.get_config("gemma3-1b", "smoke").replace(
+        dtype="float32", param_dtype="float32")
+    fam = mapi.get_family(cfg.family)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    T = 40  # > window=16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, T), 0, cfg.vocab)
+    ref = fam.apply(params, {"tokens": tokens}, cfg)
+    # perturbing a token outside every local window but inside global range
+    tokens2 = tokens.at[0, 0].set((tokens[0, 0] + 1) % cfg.vocab)
+    out2 = fam.apply(params, {"tokens": tokens2}, cfg)
+    # global layers see position 0, so late logits must change
+    assert not np.allclose(np.asarray(ref[0, -1]), np.asarray(out2[0, -1]))
+
+
+def test_flash_attention_matches_naive():
+    """Chunked online-softmax == materialised softmax attention."""
+    from repro.models.layers import flash_attention
+    rng = np.random.default_rng(0)
+    B, Tq, H, hd, K = 2, 37, 4, 16, 2
+    q = jnp.asarray(rng.standard_normal((B, Tq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Tq, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Tq, K, hd)), jnp.float32)
+    pos = jnp.arange(Tq)
+    out = flash_attention(q, k, v, pos, pos, causal=True, chunk=8)
+    # naive reference
+    G = H // K
+    qg = np.asarray(q).reshape(B, Tq, K, G, hd)
+    s = np.einsum("btkgh,bskh->btkgs", qg, np.asarray(k)) / np.sqrt(hd)
+    mask = np.tril(np.ones((Tq, Tq), bool))
+    s = np.where(mask[None, :, None, None, :], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    ref = np.einsum("btkgs,bskh->btkgh", p, np.asarray(v)).reshape(B, Tq, H, hd)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_sliding_window():
+    from repro.models.layers import flash_attention
+    rng = np.random.default_rng(1)
+    B, T, H, hd = 1, 33, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    pos = jnp.arange(T)
+    w = 4
+    out = flash_attention(q, k, v, pos, pos, causal=True, window=w, chunk=16)
+    s = np.einsum("bthd,bshd->bhts", np.asarray(q), np.asarray(k)) / np.sqrt(hd)
+    qi, ki = np.arange(T)[:, None], np.arange(T)[None, :]
+    mask = (qi >= ki) & (qi - ki < w)
+    s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    ref = np.einsum("bhts,bshd->bthd", p, np.asarray(v))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-5, atol=2e-5)
+
+
+def test_moe_routes_all_tokens_when_capacity_ample():
+    """With top-1 and generous capacity, MoE output == per-token expert MLP."""
+    from repro.models.layers import MoeParams, moe_block
+    cfg = configs.get_config("llama4-scout-17b-a16e", "smoke").replace(
+        capacity_factor=8.0, n_shared_experts=0)
+    rng = np.random.default_rng(0)
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.dff_expert
+    x = jnp.asarray(rng.standard_normal((2, 8, D)), jnp.float32)
+    p = MoeParams(
+        w_router=jnp.asarray(rng.standard_normal((D, E)), jnp.float32) * 0.1,
+        w_gate=jnp.asarray(rng.standard_normal((E, D, F)), jnp.float32) * 0.05,
+        w_up=jnp.asarray(rng.standard_normal((E, D, F)), jnp.float32) * 0.05,
+        w_down=jnp.asarray(rng.standard_normal((E, F, D)), jnp.float32) * 0.05,
+    )
+    out, aux = moe_block(x, p, cfg)
+    # reference: dense top-1 routing
+    xt = np.asarray(x).reshape(-1, D)
+    logits = xt @ np.asarray(p.w_router)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    e = probs.argmax(-1)
+    ref = np.zeros_like(xt)
+    for i, ei in enumerate(e):
+        g = xt[i] @ np.asarray(p.w_gate)[ei]
+        u = xt[i] @ np.asarray(p.w_up)[ei]
+        h = (g / (1 + np.exp(-g))) * u
+        ref[i] = h @ np.asarray(p.w_down)[ei]  # gate weight = 1 (renormalised)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, D), ref,
+                               rtol=2e-3, atol=2e-3)
+    assert np.isfinite(float(aux))

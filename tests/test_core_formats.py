@@ -1,0 +1,292 @@
+"""Unit + property tests for repro.core — the paper's format machinery."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distributions as dist
+from repro.core import element as el
+from repro.core import parse_format
+from repro.core.lloyd import lloyd_max
+from repro.core.scaling import Scaling, quantise_scale, scale_format_bits
+from repro.core.tensor_format import TensorFormat
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------- Table 4
+class TestDistributions:
+    def test_cube_root_params_normal(self):
+        assert dist.Normal(scale=2.0).cube_root().scale == pytest.approx(
+            2.0 * math.sqrt(3.0))
+
+    def test_cube_root_params_laplace(self):
+        assert dist.Laplace(scale=0.5).cube_root().scale == pytest.approx(1.5)
+
+    def test_cube_root_params_student_t(self):
+        d = dist.StudentT(nu=7.0).cube_root()
+        assert d.nu == pytest.approx(5.0 / 3.0)
+        assert d.scale == pytest.approx(math.sqrt(7.0 / (5.0 / 3.0)))
+
+    def test_rms(self):
+        assert dist.Normal(scale=3.0).rms() == pytest.approx(3.0)
+        assert dist.Laplace(scale=1.0).rms() == pytest.approx(math.sqrt(2))
+        assert dist.StudentT(nu=5.0).rms() == pytest.approx(math.sqrt(5 / 3))
+
+    @pytest.mark.parametrize("d,tol", [(dist.Normal(), 0.06),
+                                       (dist.Laplace(), 0.06),
+                                       (dist.StudentT(nu=5.0), 0.12)])
+    def test_expected_absmax_matches_simulation(self, d, tol):
+        """Table 4 approximations vs simulation (paper fig. 14)."""
+        B = 128
+        x = d.sample(np.random.default_rng(0), (4096, B))
+        emp = np.abs(x).max(axis=1).mean()
+        assert d.expected_absmax(B) == pytest.approx(emp, rel=tol)
+
+    def test_power_rule_pdf_proportionality(self):
+        """pdf(D')^3 ∝ pdf(D) pointwise (B.4)."""
+        for d in [dist.Normal(), dist.Laplace(), dist.StudentT(nu=7.0)]:
+            dp = d.cube_root()
+            xs = np.linspace(-3, 3, 7)
+            ratio = dp.pdf(xs) / np.cbrt(d.pdf(xs))
+            assert np.allclose(ratio, ratio[0], rtol=1e-6)
+
+    def test_truncated_ppf_bounds(self):
+        t = dist.Normal().truncate(-1, 1)
+        assert t.ppf(0.0) == pytest.approx(-1.0)
+        assert t.ppf(1.0) == pytest.approx(1.0)
+        assert abs(t.ppf(0.5)) < 1e-9
+
+
+# ---------------------------------------------------------------- elements
+class TestElementFormats:
+    def test_codebook_roundtrip_exact_on_codepoints(self):
+        f = el.cube_root_rms(dist.Normal(), 4)
+        q = f.jnp_codepoints()
+        assert jnp.allclose(f.dequantise(f.quantise(q)), q)
+
+    def test_round_to_nearest(self):
+        f = el.int_format(4)
+        x = jnp.asarray([0.49 / 7, 0.51 / 7, -1.2, 3.0])
+        got = f.dequantise(f.quantise(x))
+        assert got[0] == pytest.approx(0.0)
+        assert got[1] == pytest.approx(1 / 7, rel=1e-6)
+        assert got[2] == pytest.approx(-8 / 7, rel=1e-6)  # clipped to min
+        assert got[3] == pytest.approx(1.0, rel=1e-6)     # clipped to max
+
+    def test_int_asymmetric_has_zero_symmetric_does_not(self):
+        asym = el.int_format(4).np_codepoints()
+        sym = el.int_format(4, symmetric=True).np_codepoints()
+        assert 0.0 in asym and 0.0 not in sym
+        assert len(asym) == len(sym) == 16
+
+    def test_cbrt_variants_zero_handling(self):
+        sym = el.cube_root_rms(dist.Normal(), 4).np_codepoints()
+        asym = el.cube_root_rms(dist.Normal(), 4, symmetric=False).np_codepoints()
+        assert not np.any(sym == 0) and np.any(asym == 0)
+        np.testing.assert_allclose(sym, -sym[::-1], atol=1e-12)
+
+    def test_absmax_includes_pm1(self):
+        for sym in (True, False):
+            q = el.cube_root_absmax(dist.StudentT(nu=7), 4, 64,
+                                    symmetric=sym).np_codepoints()
+            assert q[0] == -1.0 and q[-1] == 1.0 and len(q) == 16
+
+    def test_signmax_pins_zero_and_one(self):
+        q = el.cube_root_signmax(dist.Normal(), 4, 64).np_codepoints()
+        assert 1.0 in q and 0.0 in q and len(q) == 16
+        assert q.max() == 1.0
+
+    def test_e2m1_values(self):
+        q = el.fp_format(2, 1).np_codepoints()
+        expect = np.array([-6, -4, -3, -2, -1.5, -1, -0.5, 0,
+                           0.5, 1, 1.5, 2, 3, 4, 6]) / 6.0
+        np.testing.assert_allclose(q, expect, atol=1e-9)
+
+    def test_nf4_table(self):
+        q = el.nf4().np_codepoints()
+        assert len(q) == 16 and q[0] == -1.0 and q[-1] == 1.0 and 0.0 in q
+
+    def test_fractional_bits(self):
+        f = el.cube_root_rms(dist.Normal(), 3.75)
+        assert f.n == round(2 ** 3.75) and abs(f.bits - math.log2(f.n)) < 1e-9
+
+    def test_cube_root_beats_quantile(self):
+        """The paper's core claim (fig. 22): α=1/3 beats α=1 for RMS error."""
+        x = jnp.asarray(RNG.standard_normal(1 << 15), jnp.float32)
+        s = Scaling(granularity="none", scale_format="exact", statistic="rms")
+        r_cbrt = TensorFormat(el.cube_root_rms(dist.Normal(), 4), s) \
+            .relative_rms_error(x)
+        r_quant = TensorFormat(el.quantile_format(dist.Normal(), 4), s) \
+            .relative_rms_error(x)
+        assert float(r_cbrt) < float(r_quant)
+
+    def test_lloyd_matches_cube_root(self):
+        """fig. 16: Lloyd-Max ≈ ∛p for matching data."""
+        x = RNG.standard_normal(1 << 15).astype(np.float32)
+        s = Scaling(granularity="none", scale_format="exact", statistic="rms")
+        r_lm = TensorFormat(lloyd_max(x, 4), s).relative_rms_error(jnp.asarray(x))
+        r_cb = TensorFormat(el.cube_root_rms(dist.Normal(), 4), s) \
+            .relative_rms_error(jnp.asarray(x))
+        assert float(r_lm) == pytest.approx(float(r_cb), rel=0.03)
+
+    def test_weighted_lloyd_prefers_weighted_region(self):
+        x = np.concatenate([RNG.standard_normal(4096),
+                            5 + 0.1 * RNG.standard_normal(4096)]).astype(np.float32)
+        w = np.concatenate([np.full(4096, 1e-4), np.full(4096, 1.0)])
+        f = lloyd_max(x, 3, weights=w, seed=1)
+        q = f.np_codepoints()
+        assert (np.abs(q - 5) < 1).sum() >= 5  # most centroids near 5
+
+
+# ---------------------------------------------------------------- scaling
+class TestScaling:
+    def test_bf16_round_away_never_below(self):
+        x = jnp.asarray(np.abs(RNG.standard_normal(4096)).astype(np.float32))
+        y = quantise_scale(x, "bf16")
+        assert bool(jnp.all(y >= x))
+
+    def test_e8m0_power_of_two_and_above(self):
+        x = jnp.asarray([0.3, 1.0, 1.5, 7.3], jnp.float32)
+        y = np.asarray(quantise_scale(x, "e8m0"))
+        np.testing.assert_allclose(y, [0.5, 1.0, 2.0, 8.0])
+
+    def test_e8m3_round_away(self):
+        x = jnp.asarray([1.0, 1.01], jnp.float32)
+        y = np.asarray(quantise_scale(x, "e8m3"))
+        # 3 mantissa bits -> resolution 1/8 around 1.0; round-away -> 1.125
+        assert y[0] == 1.0 and y[1] == pytest.approx(1.125)
+
+    def test_scale_bits(self):
+        assert scale_format_bits("bf16") == 16
+        assert scale_format_bits("e8m0") == 8
+        assert scale_format_bits("e8m3") == 11
+        assert scale_format_bits("e8m0", signed=True) == 9
+        assert scale_format_bits("bf16", signed=True) == 16  # has a sign bit
+
+    def test_block_absmax_bounds_data(self):
+        x = jnp.asarray(RNG.standard_normal(1000).astype(np.float32))
+        s = Scaling(granularity="block", statistic="absmax", block_size=64)
+        xb, scales, unblock = s.normalise(x)
+        assert float(jnp.max(jnp.abs(xb))) <= 1.0 + 1e-6
+        assert unblock(xb).shape == x.shape
+
+    def test_signmax_max_is_plus_one(self):
+        x = jnp.asarray(RNG.standard_normal(512).astype(np.float32))
+        s = Scaling(granularity="block", statistic="signmax", block_size=64,
+                    scale_format="exact")
+        xb, scales, _ = s.normalise(x)
+        maxvals = jnp.take_along_axis(xb, jnp.argmax(jnp.abs(xb), -1,
+                                                     keepdims=True), -1)
+        np.testing.assert_allclose(np.asarray(maxvals), 1.0, rtol=1e-6)
+
+    def test_scale_overhead_accounting(self):
+        s = Scaling(granularity="block", statistic="absmax", block_size=128,
+                    scale_format="bf16")
+        assert s.scale_bits_per_param((1024,)) == pytest.approx(16 / 128)
+        st = Scaling(granularity="tensor", statistic="rms")
+        assert st.scale_bits_per_param((1024,)) == pytest.approx(16 / 1024)
+        sc = Scaling(granularity="channel", statistic="absmax")
+        assert sc.scale_bits_per_param((64, 128)) == pytest.approx(16 / 128)
+
+
+# ---------------------------------------------------------------- formats
+class TestTensorFormat:
+    @pytest.mark.parametrize("spec", [
+        "trms:t4", "babsmax128:t4", "babsmax64:int4", "bsignmax128:n4",
+        "cabsmax:e2m1", "trms:n4:sp0.001", "babsmax128:nf4", "trms:t4:C",
+    ])
+    def test_packed_matches_fake_quant(self, spec):
+        """quantise→dequantise must equal fake_quant exactly."""
+        fmt = parse_format(spec)
+        x = jnp.asarray(RNG.standard_normal((64, 96)).astype(np.float32))
+        fq = fmt.fake_quant(x)
+        rt = fmt.dequantise(fmt.quantise(x))
+        np.testing.assert_allclose(np.asarray(rt), np.asarray(fq),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_sparse_outliers_kept_high_precision(self):
+        fmt = parse_format("trms:t4:sp0.01")
+        x = np.asarray(RNG.standard_normal(10000), np.float32)
+        x[7] = 40.0  # enormous outlier
+        y = np.asarray(fmt.fake_quant(jnp.asarray(x)))
+        assert y[7] == pytest.approx(40.0, rel=1e-2)  # bf16 of 40
+
+    def test_sparse_improves_heavy_tails(self):
+        x = jnp.asarray(dist.StudentT(nu=3.0).sample(
+            np.random.default_rng(3), (1 << 15,)))
+        r_plain = parse_format("trms:t4").relative_rms_error(x)
+        r_sparse = parse_format("trms:t4:sp0.005").relative_rms_error(x)
+        assert float(r_sparse) < float(r_plain)
+
+    def test_ste_gradient_is_identity(self):
+        fmt = parse_format("babsmax64:int4")
+        x = jnp.asarray(RNG.standard_normal(256).astype(np.float32))
+        g = jax.grad(lambda v: jnp.sum(fmt.fake_quant_ste(v) * 3.0))(x)
+        np.testing.assert_allclose(np.asarray(g), 3.0, rtol=1e-6)
+
+    def test_bits_accounting(self):
+        fmt = parse_format("babsmax128:t4")
+        assert fmt.bits_per_param((4096,)) == pytest.approx(4 + 16 / 128)
+        fmt = parse_format("bsignmax128~e8m0:t4")
+        assert fmt.bits_per_param((4096,)) == pytest.approx(4 + 9 / 128)
+        fmt = parse_format("trms:t4:sp0.001")
+        assert fmt.bits_per_param((2048, 2048)) == pytest.approx(
+            4 + 16 / 2048**2 + 0.001 * 48)
+
+    def test_compressed_bits_less_than_fixed(self):
+        """∛p codes are near-uniform; INT codes compress a lot (fig. 5)."""
+        x = jnp.asarray(RNG.standard_normal(1 << 15).astype(np.float32))
+        f_int = parse_format("trms:int8:C")
+        assert f_int.measured_bits_per_param(x) < 8.0 - 1.0
+
+    def test_jit_and_format_hashable(self):
+        from repro.core.tensor_format import fake_quant_jit
+        fmt = parse_format("babsmax128:t4")
+        x = jnp.asarray(RNG.standard_normal(512).astype(np.float32))
+        y1 = fake_quant_jit(fmt, x)
+        y2 = fmt.fake_quant(x)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+
+
+# ------------------------------------------------------------- properties
+class TestProperties:
+    @given(seed=st.integers(0, 2**16), bits=st.sampled_from([2, 3, 4, 5]),
+           blk=st.sampled_from([16, 64, 128]))
+    @settings(max_examples=20, deadline=None)
+    def test_error_bounded_by_block_absmax(self, seed, bits, blk):
+        """|x - fq(x)| <= scale * max codepoint gap / 2, elementwise."""
+        x = np.random.default_rng(seed).standard_normal(512).astype(np.float32)
+        fmt = parse_format(f"babsmax{blk}:int{bits}")
+        y = np.asarray(fmt.fake_quant(jnp.asarray(x)))
+        xb = np.pad(x, (0, (-len(x)) % blk)).reshape(-1, blk)
+        scales = np.abs(xb).max(1)
+        gap = np.diff(fmt.element.np_codepoints()).max()
+        bound = np.repeat(scales * gap, blk)[: len(x)] * 0.51 + 1e-6
+        assert (np.abs(x - y) <= bound * 1.01).all()
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_quantisation_idempotent(self, seed):
+        x = jnp.asarray(np.random.default_rng(seed)
+                        .standard_normal(256).astype(np.float32))
+        fmt = parse_format("babsmax64:t4")
+        y1 = fmt.fake_quant(x)
+        y2 = fmt.fake_quant(y1)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-6)
+
+    @given(scale=st.floats(0.01, 100.0), seed=st.integers(0, 2**10))
+    @settings(max_examples=15, deadline=None)
+    def test_scale_equivariance(self, scale, seed):
+        """R is invariant to data scale for absmax-scaled formats w/ exact
+        scale storage (scale absorbs into the block scale)."""
+        x = jnp.asarray(np.random.default_rng(seed)
+                        .standard_normal(1024).astype(np.float32))
+        fmt = parse_format("babsmax64~exact:t4")
+        r1 = float(fmt.relative_rms_error(x))
+        r2 = float(fmt.relative_rms_error(x * scale))
+        assert r1 == pytest.approx(r2, rel=1e-4)

@@ -1,0 +1,121 @@
+"""Pallas kernel tests: interpret-mode kernel body vs pure-jnp oracle,
+swept over shapes, dtypes and codebooks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributions as dist
+from repro.core import element as el
+from repro.kernels.block_quant.block_quant import block_quant as bq_pallas
+from repro.kernels.block_quant.ref import block_quant_ref, block_dequant_ref
+from repro.kernels.dequant_matmul.dequant_matmul import \
+    dequant_matmul as dqm_pallas
+from repro.kernels.dequant_matmul.ref import dequant_matmul_ref
+
+CODEBOOKS = {
+    "int4": el.int_format(4).np_codepoints(),
+    "t4_absmax": el.cube_root_absmax(dist.StudentT(nu=7), 4, 128)
+    .np_codepoints(),
+    "nf4": el.nf4().np_codepoints(),
+    "int8": el.int_format(8).np_codepoints(),
+}
+
+
+def rand(shape, dtype=jnp.float32, seed=0, scale=1.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.standard_normal(shape) * scale, dtype)
+
+
+class TestBlockQuantKernel:
+    @pytest.mark.parametrize("cb_name", list(CODEBOOKS))
+    @pytest.mark.parametrize("shape", [(256, 512), (512, 1024)])
+    def test_matches_oracle(self, cb_name, shape):
+        cb = jnp.asarray(CODEBOOKS[cb_name], jnp.float32)
+        x = rand(shape, seed=hash((cb_name, shape)) % 2**31)
+        codes_k, scales_k = bq_pallas(x, cb, interpret=True)
+        codes_r, scales_r = block_quant_ref(x, cb)
+        np.testing.assert_allclose(np.asarray(scales_k), np.asarray(scales_r))
+        # codes may differ at exact midpoints (fp associativity): compare
+        # dequantised values instead of raw codes
+        dk = block_dequant_ref(codes_k, scales_k, cb)
+        dr = block_dequant_ref(codes_r, scales_r, cb)
+        np.testing.assert_allclose(np.asarray(dk, np.float32),
+                                   np.asarray(dr, np.float32),
+                                   rtol=1e-2, atol=1e-2)
+        mismatch = (np.asarray(codes_k) != np.asarray(codes_r)).mean()
+        assert mismatch < 1e-3
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((256, 512), dtype)
+        codes, scales = bq_pallas(x, cb, interpret=True)
+        assert codes.dtype == jnp.uint8 and scales.dtype == jnp.float32
+        # round trip error bounded by half the max codepoint gap × scale
+        y = block_dequant_ref(codes, scales, cb)
+        err = np.abs(np.asarray(y, np.float32) - np.asarray(x, np.float32))
+        bound = np.asarray(scales).repeat(128, -1).reshape(err.shape)
+        half_gap = float(np.diff(np.asarray(cb)).max()) / 2
+        assert (err <= bound * half_gap * 1.05 + 1e-3).all()
+
+    def test_scale_round_away_property(self):
+        """Normalised data never exceeds ±1 after bf16 scale quantisation."""
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((256, 512), seed=3, scale=7.3)
+        codes, scales = bq_pallas(x, cb, interpret=True)
+        xb = np.asarray(x).reshape(256, 4, 128)
+        assert (np.abs(xb) <= np.asarray(scales)[..., None] + 1e-6).all()
+
+
+class TestDequantMatmulKernel:
+    @pytest.mark.parametrize("cb_name", ["int4", "t4_absmax", "int8"])
+    @pytest.mark.parametrize("mkn", [(128, 256, 256), (256, 512, 512)])
+    def test_matches_oracle(self, cb_name, mkn):
+        M, K, N = mkn
+        cb = jnp.asarray(CODEBOOKS[cb_name], jnp.float32)
+        x = rand((M, K), jnp.bfloat16, seed=1)
+        w = rand((K, N), seed=2, scale=0.1)
+        codes, scales = block_quant_ref(w, cb)
+        y_k = dqm_pallas(x, codes, scales, cb, interpret=True)
+        y_r = dequant_matmul_ref(x, codes, scales, cb)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+    def test_end_to_end_vs_bf16_matmul(self):
+        """Quantise→fused-matmul ≈ the bf16 matmul (int8: tight match)."""
+        M, K, N = 128, 256, 256
+        cb = jnp.asarray(CODEBOOKS["int8"], jnp.float32)
+        x = rand((M, K), jnp.bfloat16, seed=4)
+        w = rand((K, N), seed=5, scale=0.05)
+        codes, scales = block_quant_ref(w, cb)
+        y_q = dqm_pallas(x, codes, scales, cb, interpret=True)
+        y_f = jnp.dot(x.astype(jnp.float32), np.asarray(w)).astype(jnp.bfloat16)
+        rel = (np.linalg.norm(np.asarray(y_q, np.float32) -
+                              np.asarray(y_f, np.float32)) /
+               np.linalg.norm(np.asarray(y_f, np.float32)))
+        assert rel < 0.02
+
+    def test_grid_accumulation_over_k(self):
+        """K spans multiple tiles: accumulation must be exact."""
+        M, K, N = 128, 1024, 256  # K/TILE_K = 4 steps
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((M, K), jnp.bfloat16, seed=6)
+        w = rand((K, N), seed=7, scale=0.1)
+        codes, scales = block_quant_ref(w, cb)
+        y_k = dqm_pallas(x, codes, scales, cb, interpret=True)
+        y_r = dequant_matmul_ref(x, codes, scales, cb)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+
+class TestOpsWrapper:
+    def test_fallback_on_cpu(self):
+        from repro.kernels import ops
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((256, 512))
+        codes, scales = ops.block_quant(x, cb)
+        y = ops.block_dequant(codes, scales, cb)
+        assert y.shape == x.shape

@@ -1,0 +1,131 @@
+"""Equivalence tests: chunked (block-parallel matmul) WKV/SSD vs the
+step-by-step scan references — the §Perf memory-term optimisation for the
+SSM-family architectures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.rwkv6 import wkv_chunked, wkv_scan
+from repro.models.zamba2 import ssd_chunked, ssd_scan
+
+
+def _wkv_inputs(seed, B=2, T=64, H=2, hd=8, decay_lo=0.85):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    w = jnp.asarray(rng.uniform(decay_lo, 0.999, (B, T, H, hd)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, hd)) * 0.3, jnp.float32)
+    return r, k, v, w, u
+
+
+class TestWkvChunked:
+    @pytest.mark.parametrize("chunk", [8, 16, 32])
+    def test_matches_scan(self, chunk):
+        r, k, v, w, u = _wkv_inputs(0)
+        y_ref, s_ref = wkv_scan(r, k, v, w, u)
+        y_chk, s_chk = wkv_chunked(r, k, v, w, u, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_matches_scan_with_initial_state(self):
+        r, k, v, w, u = _wkv_inputs(1)
+        s0 = jnp.asarray(np.random.default_rng(9)
+                         .standard_normal((2, 2, 8, 8)), jnp.float32)
+        y_ref, s_ref = wkv_scan(r, k, v, w, u, s0)
+        y_chk, s_chk = wkv_chunked(r, k, v, w, u, s0, chunk=16)
+        np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_strong_decay_stays_finite(self):
+        """Aggressive decays hit the log clamp: outputs must stay finite and
+        close to the scan (which underflows to ~0 contributions anyway)."""
+        r, k, v, w, u = _wkv_inputs(2, decay_lo=0.05)
+        y_ref, _ = wkv_scan(r, k, v, w, u)
+        y_chk, _ = wkv_chunked(r, k, v, w, u, chunk=16)
+        assert bool(jnp.isfinite(y_chk).all())
+        np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_gradients_match(self):
+        r, k, v, w, u = _wkv_inputs(3, T=32)
+
+        def loss(fn, args):
+            y, s = fn(*args)
+            return jnp.sum(y * 0.1) + jnp.sum(s * 0.01)
+
+        g_ref = jax.grad(lambda rr: loss(wkv_scan, (rr, k, v, w, u)))(r)
+        g_chk = jax.grad(lambda rr: loss(
+            lambda *a: wkv_chunked(*a, chunk=8), (rr, k, v, w, u)))(r)
+        np.testing.assert_allclose(np.asarray(g_chk), np.asarray(g_ref),
+                                   rtol=1e-3, atol=1e-4)
+
+    @given(seed=st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_property_equivalence(self, seed):
+        r, k, v, w, u = _wkv_inputs(seed, B=1, T=32, H=1, hd=4)
+        y_ref, _ = wkv_scan(r, k, v, w, u)
+        y_chk, _ = wkv_chunked(r, k, v, w, u, chunk=8)
+        np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def _ssd_inputs(seed, B=2, T=64, H=3, hd=8, N=4):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, T, H)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.7, 0.999, (B, T, H)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, T, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, T, N)), jnp.float32)
+    return x, dt, a, Bm, Cm
+
+
+class TestSsdChunked:
+    @pytest.mark.parametrize("chunk", [8, 16, 32])
+    def test_matches_scan(self, chunk):
+        x, dt, a, Bm, Cm = _ssd_inputs(0)
+        y_ref, h_ref = ssd_scan(x, dt, a, Bm, Cm)
+        y_chk, h_chk = ssd_chunked(x, dt, a, Bm, Cm, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_matches_scan_with_initial_state(self):
+        x, dt, a, Bm, Cm = _ssd_inputs(1)
+        h0 = jnp.asarray(np.random.default_rng(5)
+                         .standard_normal((2, 3, 8, 4)), jnp.float32)
+        y_ref, h_ref = ssd_scan(x, dt, a, Bm, Cm, h0)
+        y_chk, h_chk = ssd_chunked(x, dt, a, Bm, Cm, h0, chunk=16)
+        np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gradients_match(self):
+        x, dt, a, Bm, Cm = _ssd_inputs(2, T=32)
+
+        def loss(fn, xx):
+            y, h = fn(xx, dt, a, Bm, Cm)
+            return jnp.sum(y * 0.1) + jnp.sum(h * 0.01)
+
+        g_ref = jax.grad(lambda xx: loss(ssd_scan, xx))(x)
+        g_chk = jax.grad(lambda xx: loss(
+            lambda *args: ssd_chunked(*args, chunk=8), xx))(x)
+        np.testing.assert_allclose(np.asarray(g_chk), np.asarray(g_ref),
+                                   rtol=1e-3, atol=1e-4)
+
+    @given(seed=st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_property_equivalence(self, seed):
+        x, dt, a, Bm, Cm = _ssd_inputs(seed, B=1, T=32, H=1, hd=4, N=4)
+        y_ref, _ = ssd_scan(x, dt, a, Bm, Cm)
+        y_chk, _ = ssd_chunked(x, dt, a, Bm, Cm, chunk=8)
+        np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)

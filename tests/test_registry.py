@@ -1,0 +1,45 @@
+"""Format-registry properties: the spec grammar round-trips and composes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import parse_format
+from repro.core.registry import HEADLINE_FORMATS
+
+SCALINGS = ["trms", "tabsmax", "crms", "cabsmax", "babsmax64", "babsmax128",
+            "brms128", "bsignmax128", "babsmax128~e8m0", "trms~exact"]
+ELEMENTS = ["n3", "n4", "l4", "t4", "t4nu5", "t5", "int4", "int4s", "int8",
+            "e2m1", "e3m0", "nf4", "af4", "q4", "n4a", "t3a"]
+
+
+@given(scaling=st.sampled_from(SCALINGS), element=st.sampled_from(ELEMENTS),
+       sparse=st.sampled_from(["", ":sp0.001", ":sp0.01"]))
+@settings(max_examples=60, deadline=None)
+def test_any_grammar_combination_parses_and_quantises(scaling, element,
+                                                      sparse):
+    if "signmax" in scaling and (element.startswith("int")
+                                 or element.startswith("e")
+                                 or element in ("nf4", "af4")):
+        return  # signmax pairs with ∛p construction only
+    spec = f"{scaling}:{element}{sparse}"
+    fmt = parse_format(spec)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(512),
+                    jnp.float32)
+    y = fmt.fake_quant(x)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+    bits = fmt.bits_per_param((512,))
+    assert 1.0 < bits < 12.0
+
+
+def test_headline_formats_all_parse():
+    for spec in HEADLINE_FORMATS:
+        fmt = parse_format(spec)
+        assert fmt.describe()
+
+
+@pytest.mark.parametrize("bad", ["", "t4", "zzz:t4", "trms:zz9",
+                                 "babsmax128:t4:huh"])
+def test_bad_specs_raise(bad):
+    with pytest.raises(ValueError):
+        parse_format(bad)
