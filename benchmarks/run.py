@@ -15,7 +15,7 @@ from . import (fig1_llm_tradeoff, fig4_error_size, fig5_bits_histogram,
                fig18_formats, fig19_fp_formats, fig21_block_size,
                fig22_alpha_rule, fig23_search, fig24_huffman,
                fig28_compression_scaling, fig29_rotations, fig34_signmax,
-               roofline, table1_headline)
+               roofline, serve_packed, table1_headline)
 
 MODULES = {
     "fig4": fig4_error_size,
@@ -35,6 +35,7 @@ MODULES = {
     "fig12": fig12_fisher_structure,
     "table1": table1_headline,
     "roofline": roofline,
+    "serve_packed": serve_packed,
 }
 
 

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 test runner.
+#
+#   scripts/run_tests.sh            fast suite (deselects the >10s `slow`
+#                                   train-loop tests; ~half the wall clock)
+#   scripts/run_tests.sh --all      full tier-1 suite
+#   scripts/run_tests.sh [pytest args...]   extra args forwarded to pytest
+#
+# Works offline: tests/conftest.py shims `hypothesis` when it is missing.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "${1:-}" = "--all" ]; then
+    shift
+    exec python -m pytest -q "$@"
+fi
+exec python -m pytest -q -m "not slow" "$@"

@@ -20,7 +20,8 @@ from . import distributions as dist
 from . import element as el
 from .registry import parse_format, parse_scaling, parse_element
 from .scaling import Scaling
-from .tensor_format import TensorFormat
+from .element import ElementFormat
+from .tensor_format import PackedTensor, QuantisedTensor, TensorFormat
 
 
 def path_str(path) -> str:
@@ -63,6 +64,77 @@ class QuantisationPlan:
     def dequantise(self, qparams):
         return self._map(qparams,
                          lambda f, q: q if f is None else f.dequantise(q))
+
+    # -- packed serving representation ---------------------------------------
+    def packable(self, name: str, shape, layouts: Dict[str, tuple]) -> bool:
+        """True if tensor ``name`` can be carried packed (codes + scales) and
+        consumed directly by ``kernels.ops.dequant_matmul``.
+
+        Requirements: a matmul layout is declared for the tensor, the element
+        is a codebook of ≤256 codes (uint8), the scaling is per-block, there
+        are no sparse outliers, and whole blocks tile the output dim N (so
+        flat blocks never straddle matmul rows)."""
+        f = self.formats.get(name)
+        lay = layouts.get(name)
+        if f is None or lay is None:
+            return False
+        if not isinstance(f.element, ElementFormat) or f.element.n > 256:
+            return False
+        if f.sparse is not None and f.sparse.frac > 0:
+            return False
+        if f.scaling.granularity != "block":
+            return False
+        n_lead, n_k = lay
+        if len(shape) < n_lead + n_k + 1:
+            return False
+        n_out = int(np.prod(shape[n_lead + n_k:]))
+        return n_out % f.scaling.block_size == 0
+
+    def _to_packed(self, name: str, qt: QuantisedTensor,
+                   layouts: Dict[str, tuple]) -> PackedTensor:
+        f = self.formats[name]
+        n_lead, n_k = layouts[name]
+        shape = tuple(qt.shape)
+        lead = shape[:n_lead]
+        K = int(np.prod(shape[n_lead:n_lead + n_k]))
+        out_shape = shape[n_lead + n_k:]
+        N = int(np.prod(out_shape))
+        b = f.scaling.block_size
+        codes = qt.codes.reshape(*lead, K, N)
+        scales = qt.scales.reshape(*lead, K, N // b)
+        return PackedTensor(codes=codes, scales=scales,
+                            codepoints=f.element.codepoints,
+                            out_shape=out_shape, shape=shape,
+                            dtype=qt.dtype, block=b)
+
+    def pack_quantised(self, qparams, layouts: Dict[str, tuple]):
+        """Quantised checkpoint → serving params: packable tensors become
+        :class:`PackedTensor` (zero-copy reshape of codes/scales); everything
+        else is dequantised to its reference dtype."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            qparams, is_leaf=lambda x: isinstance(x, QuantisedTensor))
+        out = []
+        for p, q in flat:
+            name = path_str(p)
+            f = self.formats.get(name)
+            if f is None or not isinstance(q, QuantisedTensor):
+                out.append(q)
+            elif (self.packable(name, tuple(q.shape), layouts)
+                  and q.sparse_idx is None):
+                out.append(self._to_packed(name, q, layouts))
+            else:
+                out.append(f.dequantise(q))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def pack(self, params, layouts: Dict[str, tuple]):
+        """Quantise + pack in one step (fresh weights → serving params)."""
+        return self.pack_quantised(self.quantise(params), layouts)
+
+    def unpack(self, packed):
+        """Serving params → dense params (PackedTensor leaves dequantised)."""
+        return jax.tree.map(
+            lambda x: x.dequantise() if isinstance(x, PackedTensor) else x,
+            packed, is_leaf=lambda x: isinstance(x, PackedTensor))
 
     # -- accounting -----------------------------------------------------------
     def bits_per_param(self, params, measured: bool = False,

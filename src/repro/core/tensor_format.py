@@ -56,6 +56,55 @@ class QuantisedTensor:
         return n
 
 
+@jax.tree_util.register_dataclass
+@dataclass
+class PackedTensor:
+    """Matmul-ready packed quantised weight (the serving representation).
+
+    Unlike :class:`QuantisedTensor` (flat blocked codes, a storage format),
+    a ``PackedTensor`` keeps the codes in the 2-D layout the fused
+    ``dequant_matmul`` kernel consumes directly:
+
+        codes  uint8 (*lead, K, N)          K = contraction dim, N = output
+        scales bf16  (*lead, K, N // block) one scale per in-row block
+
+    ``lead`` dims (scanned layer / expert stacks) slice through
+    ``jax.lax.scan`` like any array leaf; the static fields ride along.
+    ``out_shape`` is the logical trailing output dims (prod == N) so matmul
+    results can be unflattened without consulting the (lead-inclusive,
+    therefore scan-stale) ``shape``.
+    """
+
+    codes: jnp.ndarray
+    scales: jnp.ndarray
+    codepoints: tuple = dataclasses.field(metadata=dict(static=True),
+                                          default=())
+    out_shape: tuple = dataclasses.field(metadata=dict(static=True),
+                                         default=())
+    shape: tuple = dataclasses.field(metadata=dict(static=True), default=())
+    dtype: str = dataclasses.field(metadata=dict(static=True),
+                                   default="float32")
+    block: int = dataclasses.field(metadata=dict(static=True), default=128)
+
+    def codebook(self) -> jnp.ndarray:
+        return jnp.asarray(self.codepoints, jnp.float32)
+
+    @property
+    def nbytes_packed(self) -> int:
+        return int(self.codes.size * self.codes.dtype.itemsize
+                   + self.scales.size * self.scales.dtype.itemsize)
+
+    def dequantise(self) -> jnp.ndarray:
+        """Materialise the dense tensor (full, un-scan-sliced tensors only).
+
+        Bit-identical to ``TensorFormat.dequantise`` of the source
+        :class:`QuantisedTensor`: same elementwise codebook-lookup × scale,
+        only the (value-preserving) reshape differs."""
+        vals = self.codebook()[self.codes.astype(jnp.int32)]
+        s = jnp.repeat(self.scales.astype(jnp.float32), self.block, axis=-1)
+        return (vals * s).reshape(self.shape).astype(self.dtype)
+
+
 @dataclass(frozen=True)
 class TensorFormat:
     element: Union[ElementFormat, UniformGrid]

@@ -51,3 +51,17 @@ def dequant_matmul(x, codes, scales, codebook, block: int = 128,
 def dequant_matmul_interpret(x, codes, scales, codebook, block: int = 128):
     return _dqm_pallas(x, codes, scales, codebook, block=block,
                        interpret=True)
+
+
+def dequant_rows(codes, scales, codebook, block: int = 128,
+                 dtype=jnp.float32):
+    """Dequantise gathered rows of a packed weight (the embedding-lookup
+    path: gather uint8 code rows + their scales, then expand — the full
+    vocab×d table is never materialised in the serving dtype).
+
+    codes: (..., N) uint8; scales: (..., N // block); returns (..., N)."""
+    n = codes.shape[-1]
+    vals = codebook[codes.astype(jnp.int32)]
+    vals = vals.reshape(*codes.shape[:-1], n // block, block)
+    out = vals * scales.astype(jnp.float32)[..., None]
+    return out.reshape(codes.shape).astype(dtype)

@@ -26,6 +26,11 @@ def main(argv=None):
                     help="checkpoint dir (step_XXXX); random init if absent")
     ap.add_argument("--quantise", default=None,
                     help="serve with weights quantised to this format spec")
+    ap.add_argument("--packed", action="store_true",
+                    help="with --quantise: keep weights packed (uint8 codes "
+                         "+ block scales) and serve through dequant_matmul "
+                         "instead of materialising dense fake-quant weights")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--kv-len", type=int, default=128)
@@ -45,11 +50,28 @@ def main(argv=None):
     if args.quantise:
         plan = build_plan(params, args.quantise)
         bits = plan.bits_per_param(params)
-        params = plan.fake_quant(params)
-        print(f"[serve] weights quantised to {args.quantise} "
-              f"({bits:.2f} bits/param)")
-
-    eng = ServeEngine(cfg, params, batch_slots=args.slots, kv_len=args.kv_len)
+        if args.packed:
+            eng = ServeEngine.from_quantised(
+                cfg, plan.quantise(params), plan, batch_slots=args.slots,
+                kv_len=args.kv_len, prefill_chunk=args.prefill_chunk)
+            wb = eng.weight_bytes()
+            if wb["packed"] == 0:
+                print(f"[serve] WARNING: {cfg.family!r} has no pack layouts "
+                      f"— serving dequantised dense weights")
+            print(f"[serve] packed {args.quantise} ({bits:.2f} bits/param): "
+                  f"{wb['packed']:,} packed + {wb['dense']:,} dense bytes "
+                  f"resident")
+        else:
+            params = plan.fake_quant(params)
+            print(f"[serve] weights quantised to {args.quantise} "
+                  f"({bits:.2f} bits/param)")
+            eng = None
+    else:
+        eng = None
+    if eng is None:
+        eng = ServeEngine(cfg, params, batch_slots=args.slots,
+                          kv_len=args.kv_len,
+                          prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=4).tolist()

@@ -127,6 +127,18 @@ class ModelFamily:
     decode_state_specs: Callable = None  # (cfg, batch, kv_len) -> tree[ParamSpec]
     decode_step: Callable = None    # (params, state, batch, cfg) -> (logits, state)
     prefill: Callable = None        # (params, batch, cfg) -> (logits, state)
+    # --- serving capabilities -------------------------------------------------
+    # supports_ragged: decode_step takes (B, T) token chunks with per-slot
+    # positions (state["pos"]: (B,) int32) and an optional batch["t_valid"]
+    # (B,) advance count — enables continuous batching without lockstep
+    # padding and batched chunked prefill in serve.engine. Families without
+    # it are driven on the legacy lockstep path.
+    supports_ragged: bool = False
+    # pack_layouts: (cfg) -> {tensor-path: (n_lead, n_contract)} matmul
+    # layouts for serving straight from packed quantised weights
+    # (QuantisationPlan.pack_quantised). None = family not wired; the engine
+    # falls back to dequantised weights.
+    pack_layouts: Callable = None
 
 
 def register_family(fam: ModelFamily):

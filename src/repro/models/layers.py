@@ -13,7 +13,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.tensor_format import PackedTensor
+from repro.kernels import ops as kops
+
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Packed-weight dispatch (the serving path of the paper's formats)
+# ---------------------------------------------------------------------------
+
+def linear(x, w, spec: str):
+    """``einsum(spec, x, w)`` where ``w`` may be a :class:`PackedTensor`.
+
+    Dense weights take the exact einsum the call site always used
+    (bit-identical bf16 path). Packed weights route through the fused
+    ``dequant_matmul`` kernel: x is flattened to (B·T, K) and the weight
+    stream stays uint8 codes + block scales end to end. ``x`` must be
+    (B, T, *k_dims) with the trailing dims contracting, which covers every
+    projection in the decode path."""
+    if isinstance(w, PackedTensor):
+        B, T = x.shape[0], x.shape[1]
+        K = w.codes.shape[-2]
+        y = kops.dequant_matmul(x.reshape(B * T, K), w.codes, w.scales,
+                                w.codebook(), block=w.block)
+        return y.reshape(B, T, *w.out_shape)
+    return jnp.einsum(spec, x, w.astype(x.dtype))
+
+
+def embed_lookup(w, tokens):
+    """Embedding row gather; packed tables dequantise only the gathered rows
+    (codes layout (V, D), scales (V, D//block) — D must tile by block)."""
+    if isinstance(w, PackedTensor):
+        c = jnp.take(w.codes, tokens, axis=0)     # (B, T, D) uint8
+        s = jnp.take(w.scales, tokens, axis=0)    # (B, T, D // block)
+        return kops.dequant_rows(c, s, w.codebook(), block=w.block)
+    return jnp.take(w, tokens, axis=0)
 
 # Activation sharding constraint, set by the launcher (dryrun/train drivers).
 # XLA SPMD propagates parameter shardings well, but scan-carried activations
@@ -119,10 +154,9 @@ class AttnParams(NamedTuple):
 
 
 def qkv_project(x, p: AttnParams, positions, cfg, rope_on: bool = True):
-    dt = x.dtype
-    q = jnp.einsum("btd,dnh->btnh", x, p.wq.astype(dt))
-    k = jnp.einsum("btd,dnh->btnh", x, p.wk.astype(dt))
-    v = jnp.einsum("btd,dnh->btnh", x, p.wv.astype(dt))
+    q = linear(x, p.wq, "btd,dnh->btnh")
+    k = linear(x, p.wk, "btd,dnh->btnh")
+    v = linear(x, p.wv, "btd,dnh->btnh")
     if cfg.qk_norm and p.q_norm is not None:
         q = rms_norm(q, p.q_norm, cfg.norm_eps)
         k = rms_norm(k, p.k_norm, cfg.norm_eps)
@@ -213,6 +247,40 @@ def decode_attention(q, k_cache, v_cache, q_position, *, window=0,
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def chunked_decode_attention(q, k_cache, v_cache, q_positions, *, window=0):
+    """Multi-token decode attention with **per-slot** positions: a chunk of
+    T query tokens per batch row against that row's KV cache. Used for both
+    single-token decode (T=1) and batched chunked prefill — slots need not
+    be in lockstep.
+
+    q: (B, T, H, hd); caches: (B, S, K, hd); q_positions: (B, T) absolute
+    positions of the query tokens (the new tokens' k/v must already be
+    written into the cache at those positions)."""
+    B, T, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, T, K, G, hd)
+    s = jnp.einsum("btkgh,bskh->btkgs", qg, k_cache.astype(qg.dtype))
+    s = s.astype(jnp.float32) * hd ** -0.5
+    kv = jnp.arange(S)
+    mask = kv[None, None, :] <= q_positions[:, :, None]           # causal
+    mask &= jnp.where(window > 0,
+                      q_positions[:, :, None] - kv[None, None, :] < window,
+                      True)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("btkgs,bskh->btkgh", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def update_kv_cache(cache, new, pos):
+    """Write T new entries per batch row at that row's own position.
+    cache: (B, S, K, hd); new: (B, T, K, hd); pos: (B,) int32."""
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+            c, n, p, axis=0))(cache, new.astype(cache.dtype), pos)
+
+
 def attn_block(x, p: AttnParams, positions, cfg, window=0):
     """Full training/prefill attention block (pre-norm residual handled by
     the caller)."""
@@ -220,7 +288,7 @@ def attn_block(x, p: AttnParams, positions, cfg, window=0):
     o = flash_attention(q, k, v, positions, positions, causal=True,
                         window=window, chunk=cfg.attn_chunk)
     o = constrain_heads(o)
-    return jnp.einsum("btnh,nhd->btd", o, p.wo.astype(o.dtype))
+    return linear(o, p.wo, "btnh,nhd->btd")
 
 
 # ---------------------------------------------------------------------------
@@ -234,11 +302,10 @@ class MlpParams(NamedTuple):
 
 
 def swiglu(x, p: MlpParams):
-    dt = x.dtype
-    g = jnp.einsum("btd,df->btf", x, p.w_gate.astype(dt))
-    u = jnp.einsum("btd,df->btf", x, p.w_up.astype(dt))
+    g = linear(x, p.w_gate, "btd,df->btf")
+    u = linear(x, p.w_up, "btd,df->btf")
     h = jax.nn.silu(g) * u
-    return jnp.einsum("btf,fd->btd", h, p.w_down.astype(dt))
+    return linear(h, p.w_down, "btf,fd->btd")
 
 
 def gelu_mlp(x, w_in, w_out):

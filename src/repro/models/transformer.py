@@ -17,8 +17,9 @@ import numpy as np
 
 from .api import ModelConfig, ModelFamily, ParamSpec, register_family
 from .layers import (AttnParams, MlpParams, MoeParams, attn_block,
-                     decode_attention, flash_attention, moe_block,
-                     qkv_project, rms_norm, swiglu)
+                     chunked_decode_attention, embed_lookup, flash_attention,
+                     linear, moe_block, qkv_project, rms_norm, swiglu,
+                     update_kv_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -149,46 +150,56 @@ def apply(params, batch, cfg: ModelConfig):
 
 def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
     """KV cache specs: uniform full-length per-layer cache; local (windowed)
-    layers mask by window. (A rolling window cache for local layers — ~6×
-    cache saving for gemma3's 5:1 pattern — is a recorded perf-iteration
-    candidate; baseline keeps exact layer ordering simple, see EXPERIMENTS
-    §Perf.)"""
+    layers mask by window. ``pos`` is **per-slot** ((B,) int32) so serving
+    slots with different prompt lengths need not run in lockstep. (A rolling
+    window cache for local layers — ~6× cache saving for gemma3's 5:1
+    pattern — is a recorded perf-iteration candidate; baseline keeps exact
+    layer ordering simple, see EXPERIMENTS §Perf.)"""
     K, hd, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
     cd = cfg.kv_dtype or cfg.dtype
     shape = (L, batch_size, kv_len, K, hd)
     return {
         "k": ParamSpec(shape, ("layers", "batch", "seq_kv", "kv_heads", None), cd),
         "v": ParamSpec(shape, ("layers", "batch", "seq_kv", "kv_heads", None), cd),
-        "pos": ParamSpec((), (), "int32"),
+        "pos": ParamSpec((batch_size,), ("batch",), "int32"),
     }
 
 
 def decode_step(params, state, batch, cfg: ModelConfig):
-    """One-token decode. batch: {"tokens": (B, 1)}. Returns (logits, state).
+    """Chunked decode step with per-slot positions.
+
+    batch: {"tokens": (B, T), "t_valid": optional (B,) int32}. T=1 is plain
+    decode; T>1 is (batched) chunked prefill. Each row writes its T new k/v
+    at its own ``state["pos"][b]`` and advances by ``t_valid[b]`` (default
+    T). Rows whose chunk is partly padding (ragged prompts, or decode rows
+    riding in a prefill-sized call) advance by their valid count; the k/v
+    written beyond it land at positions ≥ the row's new pos, which are
+    always rewritten before they become visible to attention (write-before-
+    read), so padding is harmless. Returns (logits (B, T, V), state); row
+    b's next-token logits live at index t_valid[b]-1.
 
     Uniform-cache models run the layer scan directly over the stacked cache;
-    local/global models split the scan into two stacks (local first — the
-    pattern interleave does not change math since each layer only reads its
-    own cache)."""
+    weights may be PackedTensors (serving from packed quantised weights) —
+    dense weights take the identical einsum path as before."""
     tokens = batch["tokens"]
-    B = tokens.shape[0]
+    B, T = tokens.shape
     dt = jnp.dtype(cfg.dtype)
-    pos = state["pos"]
-    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
-    positions = pos[None] + jnp.zeros((1,), jnp.int32)
+    pos = state["pos"]                                     # (B,)
+    t_valid = batch.get("t_valid")
+    adv = jnp.full((B,), T, jnp.int32) if t_valid is None else t_valid
+    x = embed_lookup(params["embed"], tokens).astype(dt)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
 
     windows = jnp.asarray(cfg.window_pattern())
 
     def layer_decode(x, lp, k_cache, v_cache, window):
         h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
         q, k_new, v_new = qkv_project(h, _layer_attn_params(lp), positions, cfg)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
-        o = decode_attention(q, k_cache, v_cache, pos, window=window)
-        attn_out = jnp.einsum("btnh,nhd->btd", o, lp["wo"].astype(o.dtype))
-        x = x + attn_out
+        k_cache = update_kv_cache(k_cache, k_new, pos)
+        v_cache = update_kv_cache(v_cache, v_new, pos)
+        o = chunked_decode_attention(q, k_cache, v_cache, positions,
+                                     window=window)
+        x = x + linear(o, lp["wo"], "btnh,nhd->btd")
         h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
         if cfg.n_experts:
             moe = MoeParams(
@@ -207,11 +218,11 @@ def decode_step(params, state, batch, cfg: ModelConfig):
 
     x, (k_new, v_new) = jax.lax.scan(
         body, x, (params["layers"], state["k"], state["v"], windows))
-    new_state = {"k": k_new, "v": v_new, "pos": pos + 1}
+    new_state = {"k": k_new, "v": v_new, "pos": pos + adv}
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
-    logits = jnp.einsum("btd,dv->btv", x, unembed.astype(dt))
+    logits = linear(x, unembed, "btd,dv->btv")
     return logits.astype(jnp.float32), new_state
 
 
@@ -227,6 +238,32 @@ def init(rng, cfg: ModelConfig):
     return init_from_specs(rng, param_specs(cfg))
 
 
+def pack_layouts(cfg: ModelConfig) -> dict:
+    """Matmul layouts for serving from packed quantised weights: tensor path
+    → (n_lead, n_contract). Lead dims are scanned (layers); contraction dims
+    come next; the rest are output dims (blocked by the scale block size).
+
+    Not wired (left dense / dequantised by the engine): MoE expert stacks
+    and the router (routed through sort-based dispatch, not a plain matmul)
+    and tied embeddings (the unembed transpose contracts along the blocked
+    axis). Both are recorded ROADMAP items."""
+    lay = {
+        "['layers']['wq']": (1, 1),
+        "['layers']['wk']": (1, 1),
+        "['layers']['wv']": (1, 1),
+        "['layers']['wo']": (1, 2),
+        "['layers']['w_gate']": (1, 1),
+        "['layers']['w_up']": (1, 1),
+        "['layers']['w_down']": (1, 1),
+    }
+    if not cfg.tie_embeddings:
+        # embed rows gather-dequantise (layers.embed_lookup); unembed is a
+        # plain (D, V) matmul
+        lay["['embed']"] = (0, 1)
+        lay["['unembed']"] = (0, 1)
+    return lay
+
+
 register_family(ModelFamily(
     name="transformer",
     param_specs=param_specs,
@@ -235,4 +272,6 @@ register_family(ModelFamily(
     decode_state_specs=decode_state_specs,
     decode_step=decode_step,
     prefill=prefill,
+    supports_ragged=True,
+    pack_layouts=pack_layouts,
 ))

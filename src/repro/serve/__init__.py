@@ -1,3 +1,42 @@
+"""repro.serve — production-style serving on the paper's quantised formats.
+
+The deployment half of the paper's claim: block-scaled codebook formats cut
+the weight stream ~4× at 4 bits, and the serving path realises it by never
+materialising a dense copy of planned tensors.
+
+Components
+----------
+``engine.ServeEngine``
+    Fixed-slot continuous-batching engine. Two weight representations:
+
+    * dense (bf16/f32) params — the bit-identical baseline path;
+    * **packed** params (``ServeEngine.from_quantised``): each planned
+      tensor stays uint8 codes + bf16 block scales + codebook
+      (:class:`repro.core.PackedTensor`), and every matmul routes through
+      the fused ``kernels.ops.dequant_matmul`` (Pallas on TPU, jnp oracle
+      off-TPU). Embedding rows gather-dequantise on the fly.
+
+    Families with ``ModelFamily.supports_ragged`` (transformer, internvl)
+    decode with **per-slot KV positions** and **batched chunked prefill**:
+    slots admit ragged prompt lengths with no lockstep padding; prompts
+    stream through ``decode_step`` in ``prefill_chunk``-token chunks while
+    decode-phase slots ride along in the same call (one valid token each).
+    Other families (rwkv6, zamba2, whisper) run the legacy lockstep loop.
+
+    ``ServeEngine.weight_bytes()`` reports resident packed vs dense bytes;
+    ``benchmarks/serve_packed.py`` measures tokens/s and weight bytes for
+    both paths.
+
+``context_parallel``
+    Flash-decode attention over a sequence-sharded KV cache (exact
+    log-sum-exp combine), for caches too big for one device.
+
+Which tensors pack is declared per family (``ModelFamily.pack_layouts``)
+and checked per format (``QuantisationPlan.packable``): block-scaled
+codebooks of ≤256 codes whose output dim tiles by the scale block. The
+rest (MoE expert stacks, tied embeddings, tensor/channel-scaled or sparse
+formats) are dequantised at load — see ROADMAP open items.
+"""
 from . import context_parallel, engine  # noqa: F401
 from .engine import Request, ServeEngine, greedy_generate
 

@@ -1,19 +1,27 @@
 """Serving engine: batched generation over fixed slots with continuous
 batching (finished sequences are replaced without stopping the batch), on
 bf16 or **packed-quantised** weights (the paper's formats as a serving
-feature: ~4× weight-stream reduction at 4 bits, realised on TPU by the
-fused dequant_matmul kernel).
+feature: ~4× weight-stream reduction at 4 bits, realised by the fused
+dequant_matmul kernel — the weight stream stays uint8 codes + block scales
+end to end; no bf16 copy is ever materialised for packed tensors).
+
+Families with ``supports_ragged`` (transformer, internvl) run with per-slot
+KV positions and batched chunked prefill: slots admit ragged prompt lengths
+without lockstep padding, and prompts stream through ``decode_step`` in
+chunks of ``prefill_chunk`` tokens (decode-phase slots ride along in the
+same call, one valid token each). Other families fall back to the legacy
+lockstep loop.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.tensor_format import PackedTensor
 from repro.models.api import ModelConfig, ParamSpec, get_family
 
 
@@ -35,18 +43,24 @@ class Generation:
 class ServeEngine:
     """Fixed-slot continuous-batching decode engine.
 
-    Prefill is run token-by-token through ``decode_step`` (exact; a fused
-    chunked prefill is a recorded perf item). Weights may be a dequantised
-    view of a packed checkpoint (`from_quantised`).
+    Ragged-capable families decode with per-slot positions and batched
+    chunked prefill; weights may be held packed (``from_quantised``) so the
+    hot loop reads the quantised stream the kernel dequantises on the fly.
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
-                 kv_len: int = 256):
+                 kv_len: int = 256, prefill_chunk: int = 8):
         self.cfg = cfg
         self.fam = get_family(cfg.family)
         self.params = params
         self.B = batch_slots
         self.kv_len = kv_len
+        self.ragged = bool(getattr(self.fam, "supports_ragged", False))
+        self.prefill_chunk = max(1, prefill_chunk) if self.ragged else 1
+        # ragged mode: chunk writes may spill past a slot's final position;
+        # a `prefill_chunk` slack region keeps them off valid cache rows
+        # (they are never visible: positions ≥ kv_len are never attended)
+        self._cache_len = kv_len + (self.prefill_chunk if self.ragged else 0)
         self._state = self._zero_state()
         self._slots: List[Optional[Generation]] = [None] * batch_slots
         self._queue: List[Request] = []
@@ -56,22 +70,94 @@ class ServeEngine:
             lambda p, s, b: self.fam.decode_step(p, s, b, self.cfg))
 
     @classmethod
-    def from_quantised(cls, cfg: ModelConfig, qparams, plan, **kw):
-        params = plan.dequantise(qparams)
+    def from_quantised(cls, cfg: ModelConfig, qparams, plan,
+                       packed: bool = True, **kw):
+        """Build an engine from a quantised checkpoint.
+
+        ``packed=True`` (default) keeps every packable planned tensor in its
+        quantised form — uint8 codes + block scales + codebook, carried as
+        :class:`PackedTensor` leaves — and serves through the fused
+        ``dequant_matmul`` path. Tensors the family has no matmul layout for
+        (or whose format is not block-scaled ≤8-bit) are dequantised, as is
+        everything when the family declares no layouts at all."""
+        layouts = getattr(get_family(cfg.family), "pack_layouts", None)
+        if packed and layouts is not None:
+            params = plan.pack_quantised(qparams, layouts(cfg))
+        else:
+            params = plan.dequantise(qparams)
         return cls(cfg, params, **kw)
 
     # ----------------------------------------------------------------- state
     def _zero_state(self):
-        specs = self.fam.decode_state_specs(self.cfg, self.B, self.kv_len)
+        specs = self.fam.decode_state_specs(self.cfg, self.B, self._cache_len)
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
                             is_leaf=lambda x: isinstance(x, ParamSpec))
 
+    # ------------------------------------------------------------ accounting
+    def weight_bytes(self) -> dict:
+        """Resident parameter bytes: packed (codes+scales) vs dense leaves."""
+        packed = dense = 0
+        for leaf in jax.tree.leaves(
+                self.params, is_leaf=lambda x: isinstance(x, PackedTensor)):
+            if isinstance(leaf, PackedTensor):
+                packed += leaf.nbytes_packed
+            else:
+                dense += int(leaf.size) * leaf.dtype.itemsize
+        return {"packed": packed, "dense": dense, "total": packed + dense}
+
     # ------------------------------------------------------------------- api
     def submit(self, req: Request):
+        assert len(req.prompt) < self.kv_len, "prompt longer than KV budget"
         self._queue.append(req)
 
     def run(self, max_steps: int = 512) -> List[Generation]:
         """Drive decode until queue + slots drain (or max_steps)."""
+        if self.ragged:
+            return self._run_ragged(max_steps)
+        return self._run_lockstep(max_steps)
+
+    # ------------------------------------------------- ragged (per-slot pos)
+    def _run_ragged(self, max_steps: int) -> List[Generation]:
+        finished: List[Generation] = []
+        for _ in range(max_steps):
+            self._fill_slots()
+            if all(s is None for s in self._slots):
+                break
+            prefilling = any(
+                g is not None and self._slot_pos[i] < len(self._slot_prompt[i])
+                for i, g in enumerate(self._slots))
+            T = self.prefill_chunk if prefilling else 1
+            toks = np.zeros((self.B, T), np.int32)
+            t_valid = np.zeros(self.B, np.int32)
+            for i, g in enumerate(self._slots):
+                if g is None:
+                    continue
+                consumed = int(self._slot_pos[i])
+                prompt = self._slot_prompt[i]
+                if consumed < len(prompt):        # prefill: next chunk
+                    v = min(T, len(prompt) - consumed)
+                    toks[i, :v] = prompt[consumed:consumed + v]
+                else:                             # decode: last sampled token
+                    v = 1
+                    toks[i, 0] = g.tokens[-1]
+                t_valid[i] = v
+            self._state["pos"] = jnp.asarray(self._slot_pos)
+            logits, self._state = self._step(
+                self.params, self._state,
+                {"tokens": jnp.asarray(toks), "t_valid": jnp.asarray(t_valid)})
+            logits = np.asarray(logits)
+            for i, g in enumerate(self._slots):
+                if g is None:
+                    continue
+                v = int(t_valid[i])
+                self._slot_pos[i] += v
+                if self._slot_pos[i] < len(self._slot_prompt[i]):
+                    continue                      # still prefilling
+                self._emit_token(i, g, logits[i, v - 1], finished)
+        return finished
+
+    # ----------------------------------------------------- legacy (lockstep)
+    def _run_lockstep(self, max_steps: int) -> List[Generation]:
         finished: List[Generation] = []
         for _ in range(max_steps):
             self._fill_slots()
@@ -92,6 +178,27 @@ class ServeEngine:
                 self._slots[i]._req = req  # type: ignore
                 self._slot_prompt[i] = list(req.prompt)
                 self._slot_pos[i] = 0
+                # ragged mode: stale cache rows of the previous occupant are
+                # overwritten before they are read (write-before-read), so
+                # only the position needs resetting — done via _slot_pos.
+
+    def _emit_token(self, i: int, g: Generation, logits_row: np.ndarray,
+                    finished: List[Generation]):
+        req = g._req  # type: ignore
+        if req.temperature > 0:
+            z = logits_row / req.temperature
+            p = np.exp(z - z.max())
+            p /= p.sum()
+            tok = int(np.random.default_rng(len(g.tokens)).choice(
+                len(p), p=p))
+        else:
+            tok = int(np.argmax(logits_row))
+        g.tokens.append(tok)
+        if (len(g.tokens) >= req.max_new_tokens
+                or self._slot_pos[i] >= self.kv_len - 1):
+            g.done = True
+            finished.append(g)
+            self._slots[i] = None
 
     def _current_tokens(self):
         toks = np.zeros((self.B, 1), np.int32)
@@ -109,30 +216,16 @@ class ServeEngine:
         return jnp.asarray(toks)
 
     def _advance(self, logits: np.ndarray, finished: List[Generation]):
-        # NOTE: `pos` is shared across slots in the state (scalar); slots are
-        # kept in lockstep by padding prompts — a per-slot position is a
-        # recorded extension. Here all slots advance together.
+        # NOTE: lockstep fallback for families without per-slot positions
+        # (state pos is a shared scalar); slots stay in step by padding.
         for i, g in enumerate(self._slots):
             if g is None:
                 continue
             self._slot_pos[i] += 1
-            prompt = self._slot_prompt[i]
-            if self._slot_pos[i] < len(prompt):
+            if self._slot_pos[i] < len(self._slot_prompt[i]):
                 continue  # still prefilling this slot
-            req = g._req  # type: ignore
-            if req.temperature > 0:
-                p = np.exp(logits[i] / req.temperature)
-                p /= p.sum()
-                tok = int(np.random.default_rng(len(g.tokens)).choice(
-                    len(p), p=p))
-            else:
-                tok = int(np.argmax(logits[i]))
-            g.tokens.append(tok)
-            if (len(g.tokens) >= req.max_new_tokens
-                    or self._slot_pos[i] >= self.kv_len - 1):
-                g.done = True
-                finished.append(g)
-                self._slots[i] = None
+            self._emit_token(i, g, logits[i], finished)
+    # ------------------------------------------------------------------------
 
 
 def greedy_generate(cfg: ModelConfig, params, prompt: np.ndarray,

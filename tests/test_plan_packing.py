@@ -1,0 +1,181 @@
+"""QuantisationPlan pack/unpack: the serving representation (PackedTensor,
+matmul-layout uint8 codes + block scales) must round-trip exactly against
+the storage representation (QuantisedTensor) and TensorFormat's own
+quantise→dequantise."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PackedTensor, QuantisedTensor, build_plan, parse_format
+from repro.core.plan import QuantisationPlan, path_str
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "embed": jnp.asarray(rng.standard_normal((128, 64)), jnp.float32),
+        "layers": {
+            "wq": jnp.asarray(rng.standard_normal((2, 64, 2, 32)),
+                              jnp.float32),
+            "wo": jnp.asarray(rng.standard_normal((2, 2, 32, 64)),
+                              jnp.float32),
+            "norm": jnp.ones((2, 64), jnp.float32),  # not quantisable
+        },
+        "unembed": jnp.asarray(rng.standard_normal((64, 128)), jnp.float32),
+    }
+
+
+LAYOUTS = {
+    "['embed']": (0, 1),
+    "['layers']['wq']": (1, 1),
+    "['layers']['wo']": (1, 2),
+    "['unembed']": (0, 1),
+}
+
+
+class TestPackQuantised:
+    def setup_method(self, _):
+        self.params = _params()
+        self.plan = build_plan(self.params, "babsmax32:n4")
+        assert self.plan.formats["['layers']['norm']"] is None
+        self.q = self.plan.quantise(self.params)
+        self.packed = self.plan.pack_quantised(self.q, LAYOUTS)
+
+    def test_dtypes_and_shapes(self):
+        pk = self.packed
+        wq = pk["layers"]["wq"]
+        assert isinstance(wq, PackedTensor)
+        assert wq.codes.dtype == jnp.uint8
+        assert wq.scales.dtype == jnp.bfloat16
+        assert wq.codes.shape == (2, 64, 64)        # (L, K=D, N=H*hd)
+        assert wq.scales.shape == (2, 64, 2)        # N // block = 64/32
+        assert wq.out_shape == (2, 32)
+        wo = pk["layers"]["wo"]
+        assert wo.codes.shape == (2, 64, 64)        # (L, K=H*hd, N=D)
+        assert wo.scales.shape == (2, 64, 2)
+        assert wo.out_shape == (64,)
+        emb = pk["embed"]
+        assert emb.codes.shape == (128, 64)         # (V, D): gather rows
+        assert emb.scales.shape == (128, 2)
+        # non-quantised leaves pass through untouched
+        assert pk["layers"]["norm"] is self.q["layers"]["norm"]
+
+    def test_dequant_matches_tensor_format_roundtrip(self):
+        """PackedTensor.dequantise == TensorFormat.quantise→dequantise,
+        exactly (same elementwise ops, reshape only)."""
+        for name, get in [
+                ("['layers']['wq']", lambda t: t["layers"]["wq"]),
+                ("['layers']['wo']", lambda t: t["layers"]["wo"]),
+                ("['embed']", lambda t: t["embed"]),
+                ("['unembed']", lambda t: t["unembed"])]:
+            fmt = self.plan.formats[name]
+            ref = fmt.dequantise(fmt.quantise(get(self.params)))
+            got = get(self.packed).dequantise()
+            assert got.shape == ref.shape and got.dtype == ref.dtype
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref),
+                                          err_msg=name)
+
+    def test_unpack_matches_plan_dequantise(self):
+        dense = self.plan.unpack(self.packed)
+        ref = self.plan.dequantise(self.q)
+        for (pa, a), (pb, b) in zip(
+                jax.tree_util.tree_flatten_with_path(dense)[0],
+                jax.tree_util.tree_flatten_with_path(ref)[0]):
+            assert path_str(pa) == path_str(pb)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=path_str(pa))
+
+    def test_pack_is_quantise_then_pack(self):
+        packed2 = self.plan.pack(self.params, LAYOUTS)
+        np.testing.assert_array_equal(
+            np.asarray(packed2["layers"]["wq"].codes),
+            np.asarray(self.packed["layers"]["wq"].codes))
+
+
+class TestPackability:
+    def test_unpackable_block_size_falls_back_to_dense(self):
+        """N=64 does not tile by block=128 → dequantised dense fallback."""
+        params = _params()
+        plan = build_plan(params, "babsmax128:n4")
+        q = plan.quantise(params)
+        packed = plan.pack_quantised(q, LAYOUTS)
+        wq = packed["layers"]["wq"]
+        assert not isinstance(wq, PackedTensor)
+        np.testing.assert_array_equal(
+            np.asarray(wq),
+            np.asarray(plan.formats["['layers']['wq']"].dequantise(
+                q["layers"]["wq"])))
+
+    def test_tensor_granularity_not_packable(self):
+        params = _params()
+        plan = QuantisationPlan(
+            {n: parse_format("trms:n4") if n == "['layers']['wq']" else None
+             for n, _ in _flat_names(params)})
+        packed = plan.pack_quantised(plan.quantise(params), LAYOUTS)
+        assert not isinstance(packed["layers"]["wq"], PackedTensor)
+
+    def test_sparse_outliers_not_packable(self):
+        params = _params()
+        plan = QuantisationPlan(
+            {n: parse_format("babsmax32:n4:sp0.01")
+             if n == "['layers']['wq']" else None
+             for n, _ in _flat_names(params)})
+        packed = plan.pack_quantised(plan.quantise(params), LAYOUTS)
+        assert not isinstance(packed["layers"]["wq"], PackedTensor)
+
+    def test_no_layout_means_dense(self):
+        params = _params()
+        plan = QuantisationPlan(
+            {n: parse_format("babsmax32:n4") if n == "['layers']['wq']"
+             else None for n, _ in _flat_names(params)})
+        packed = plan.pack_quantised(plan.quantise(params), {})
+        assert not isinstance(packed["layers"]["wq"], PackedTensor)
+
+    def test_int8_packs_uint8(self):
+        """256-code formats still fit uint8 codes."""
+        params = _params()
+        plan = QuantisationPlan(
+            {n: parse_format("babsmax32:int8") if n == "['layers']['wq']"
+             else None for n, _ in _flat_names(params)})
+        packed = plan.pack_quantised(plan.quantise(params), LAYOUTS)
+        assert isinstance(packed["layers"]["wq"], PackedTensor)
+        assert packed["layers"]["wq"].codes.dtype == jnp.uint8
+
+
+def _flat_names(tree):
+    return [(path_str(p), x)
+            for p, x in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+class TestPackedMatmulEquivalence:
+    def test_linear_matches_dense_einsum(self):
+        """layers.linear on a PackedTensor == einsum on its dequantised
+        dense tensor (within fp tolerance of the two contraction orders)."""
+        from repro.models.layers import linear
+        rng = np.random.default_rng(3)
+        w = jnp.asarray(rng.standard_normal((64, 2, 32)), jnp.float32)
+        fmt = parse_format("babsmax32:n4")
+        plan = QuantisationPlan({"['w']": fmt})
+        packed = plan.pack_quantised(plan.quantise({"w": w}),
+                                     {"['w']": (0, 1)})["w"]
+        x = jnp.asarray(rng.standard_normal((2, 3, 64)), jnp.float32)
+        ref = jnp.einsum("btd,dnh->btnh", x, packed.dequantise())
+        got = linear(x, packed, "btd,dnh->btnh")
+        assert got.shape == ref.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_embed_lookup_matches_dense_take(self):
+        from repro.models.layers import embed_lookup
+        rng = np.random.default_rng(4)
+        w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+        fmt = parse_format("babsmax32:n4")
+        plan = QuantisationPlan({"['w']": fmt})
+        packed = plan.pack_quantised(plan.quantise({"w": w}),
+                                     {"['w']": (0, 1)})["w"]
+        toks = jnp.asarray(rng.integers(0, 128, (2, 5)), jnp.int32)
+        ref = jnp.take(packed.dequantise(), toks, axis=0)
+        got = embed_lookup(packed, toks)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-6, atol=2e-6)

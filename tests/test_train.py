@@ -106,6 +106,7 @@ class TestLoop:
         state, hist = train(CFG, tc, ac, batch_fn)
         assert hist[-1]["loss"] < hist[0]["loss"] * 0.9
 
+    @pytest.mark.slow
     def test_qat_step_runs_and_improves_kl(self):
         from repro.train.qat import qat_plan_for
         rng = jax.random.PRNGKey(0)
@@ -131,6 +132,7 @@ class TestLoop:
 
 
 class TestMicrobatching:
+    @pytest.mark.slow
     def test_grad_accumulation_matches_full_batch(self):
         """microbatches=N must produce the same loss and gradients as one
         big batch (CE is a token mean over equal-sized slices). Post-Adam
@@ -199,6 +201,7 @@ class TestCheckpoint:
         b = jax.tree.leaves(restored["params"])[0]
         np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
+    @pytest.mark.slow
     def test_restart_is_bit_exact(self, tmp_path):
         """train 10 straight == train 5, checkpoint, restart, train 5."""
         batch_fn = make_batch_fn(CFG, seq=32, batch=2)
