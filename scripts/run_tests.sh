@@ -4,6 +4,10 @@
 #   scripts/run_tests.sh            fast suite (deselects the >10s `slow`
 #                                   train-loop tests; ~half the wall clock)
 #   scripts/run_tests.sh --all      full tier-1 suite
+#   scripts/run_tests.sh --kernels  interpret-mode Pallas kernel smoke:
+#                                   runs the kernel bodies (block_quant +
+#                                   dequant_matmul incl. nibble-packed)
+#                                   against the jnp oracles
 #   scripts/run_tests.sh [pytest args...]   extra args forwarded to pytest
 #
 # Works offline: tests/conftest.py shims `hypothesis` when it is missing.
@@ -14,5 +18,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "${1:-}" = "--all" ]; then
     shift
     exec python -m pytest -q "$@"
+fi
+if [ "${1:-}" = "--kernels" ]; then
+    shift
+    exec python -m pytest -q tests/test_kernels.py "$@"
 fi
 exec python -m pytest -q -m "not slow" "$@"

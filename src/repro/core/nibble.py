@@ -1,0 +1,76 @@
+"""Nibble (4-bit) code packing: two codes per uint8 byte along the K dim.
+
+This is the storage layout that turns ≤16-codepoint formats into the paper's
+full ~4× weight-stream cut over bf16 (~7.5× vs the f32 master): one uint8
+per code only reaches ~2×, so sub-byte banking is where the remaining factor
+lives (cf. Q-Palette's fractional-bit banking and the NF4 absmax-blockwise
+storage analysis).
+
+Layout — **per-K-tile half interleave**, chosen for the fused
+``dequant_matmul`` kernel: K rows are grouped into tiles of
+``nibble_k_tile(K)`` rows (the kernel's K tile when the kernel can run);
+within each tile the first half of the rows occupies the low nibbles and the
+second half the high nibbles of a ``(tile/2, N)`` byte block. The kernel's
+unpack is then two vector ops + one sublane concatenate per tile:
+
+    lo = bytes & 0xF   → tile rows [0, tile/2)
+    hi = bytes >> 4    → tile rows [tile/2, tile)
+
+with no cross-lane shuffles, and each grid step over packed rows decodes a
+*contiguous* run of logical K rows, so the activation tile spec stays the
+plain ``(TM, TK)`` slab.
+
+All helpers are pure jnp (jit-safe) and shared by the packing path
+(``core.plan``), the jnp oracle (``kernels.dequant_matmul.ref``) and the
+gather path (``kernels.ops.dequant_rows`` via ``nibble_row_coords``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# The fused kernel's K tile. kernels/dequant_matmul imports this constant as
+# its TILE_K so the packed layout and the kernel's per-step unpack can never
+# drift apart.
+NIBBLE_K_TILE = 256
+
+
+def nibble_k_tile(K: int) -> int:
+    """Interleave tile for a contraction dim of ``K`` rows (``K`` even).
+
+    Equals the dequant_matmul K tile (``min(NIBBLE_K_TILE, K)``) whenever the
+    Pallas kernel could run this shape (K divisible by its tile); shapes only
+    the jnp oracle can serve fall back to one global half-split tile."""
+    assert K % 2 == 0, f"nibble packing needs an even K, got {K}"
+    t = min(NIBBLE_K_TILE, K)
+    return t if (K % t == 0 and t % 2 == 0) else K
+
+
+def pack_nibbles(codes: jnp.ndarray) -> jnp.ndarray:
+    """codes (*lead, K, N) uint8 with values < 16 → (*lead, K//2, N) bytes."""
+    *lead, K, N = codes.shape
+    t = nibble_k_tile(K)
+    c = codes.reshape(*lead, K // t, 2, t // 2, N)
+    lo, hi = c[..., 0, :, :], c[..., 1, :, :]
+    return (lo | (hi << 4)).reshape(*lead, K // 2, N)
+
+
+def unpack_nibbles(packed: jnp.ndarray, K: int) -> jnp.ndarray:
+    """packed (*lead, K//2, N) bytes → (*lead, K, N) uint8 codes < 16."""
+    *lead, Kp, N = packed.shape
+    assert Kp * 2 == K, (packed.shape, K)
+    t = nibble_k_tile(K)
+    p = packed.reshape(*lead, K // t, t // 2, N)
+    c = jnp.stack([p & 0xF, p >> 4], axis=-3)       # (*lead, K//t, 2, t//2, N)
+    return c.reshape(*lead, K, N)
+
+
+def nibble_row_coords(rows, K: int):
+    """Map logical row ids → (packed byte row, nibble index ∈ {0, 1}).
+
+    For gathers along the packed dim (embedding lookups): the byte row holds
+    the wanted code in its low (0) or high (1) nibble. Accepts numpy or jnp
+    integer arrays of any shape."""
+    t = nibble_k_tile(K)
+    half = t // 2
+    tile, i = rows // t, rows % t
+    return tile * half + i % half, i // half

@@ -102,10 +102,17 @@ class QuantisationPlan:
         b = f.scaling.block_size
         codes = qt.codes.reshape(*lead, K, N)
         scales = qt.scales.reshape(*lead, K, N // b)
+        # sub-byte banking: ≤16-codepoint codebooks store two codes per byte
+        # (K-dim nibble interleave, core.nibble) — the full 4× stream cut.
+        # Odd K (no row to pair) falls through to one uint8 per code.
+        bits = 8
+        if f.element.n <= 16 and K % 2 == 0:
+            from .nibble import pack_nibbles
+            codes, bits = pack_nibbles(codes), 4
         return PackedTensor(codes=codes, scales=scales,
                             codepoints=f.element.codepoints,
                             out_shape=out_shape, shape=shape,
-                            dtype=qt.dtype, block=b)
+                            dtype=qt.dtype, block=b, bits=bits)
 
     def pack_quantised(self, qparams, layouts: Dict[str, tuple]):
         """Quantised checkpoint → serving params: packable tensors become

@@ -50,9 +50,11 @@ class QuantisedTensor:
 
     @property
     def nbytes_packed(self) -> int:
-        n = self.codes.size * self.codes.dtype.itemsize + self.scales.size * 2
+        n = (self.codes.size * self.codes.dtype.itemsize
+             + self.scales.size * self.scales.dtype.itemsize)
         if self.sparse_idx is not None:
-            n += self.sparse_idx.size * 4 + self.sparse_val.size * 2
+            n += (self.sparse_idx.size * self.sparse_idx.dtype.itemsize
+                  + self.sparse_val.size * self.sparse_val.dtype.itemsize)
         return n
 
 
@@ -66,7 +68,13 @@ class PackedTensor:
     ``dequant_matmul`` kernel consumes directly:
 
         codes  uint8 (*lead, K, N)          K = contraction dim, N = output
+               — or (*lead, K // 2, N) when ``bits == 4``: two codes per
+               byte, K-dim nibble interleave (``core.nibble`` layout)
         scales bf16  (*lead, K, N // block) one scale per in-row block
+
+    ``bits`` is the static storage width of one code: 8 (one uint8 each) or
+    4 (nibble-packed, for ≤16-codepoint codebooks with even K — the paper's
+    full 4× weight-stream cut over bf16).
 
     ``lead`` dims (scanned layer / expert stacks) slice through
     ``jax.lax.scan`` like any array leaf; the static fields ride along.
@@ -85,22 +93,35 @@ class PackedTensor:
     dtype: str = dataclasses.field(metadata=dict(static=True),
                                    default="float32")
     block: int = dataclasses.field(metadata=dict(static=True), default=128)
+    bits: int = dataclasses.field(metadata=dict(static=True), default=8)
 
     def codebook(self) -> jnp.ndarray:
         return jnp.asarray(self.codepoints, jnp.float32)
+
+    @property
+    def k_dim(self) -> int:
+        """Logical contraction length (codes rows × codes per byte)."""
+        return self.codes.shape[-2] * (2 if self.bits == 4 else 1)
 
     @property
     def nbytes_packed(self) -> int:
         return int(self.codes.size * self.codes.dtype.itemsize
                    + self.scales.size * self.scales.dtype.itemsize)
 
+    def unpacked_codes(self) -> jnp.ndarray:
+        """Codes as one uint8 per element, (*lead, K, N) (nibbles expanded)."""
+        if self.bits == 4:
+            from .nibble import unpack_nibbles
+            return unpack_nibbles(self.codes, self.k_dim)
+        return self.codes
+
     def dequantise(self) -> jnp.ndarray:
         """Materialise the dense tensor (full, un-scan-sliced tensors only).
 
         Bit-identical to ``TensorFormat.dequantise`` of the source
         :class:`QuantisedTensor`: same elementwise codebook-lookup × scale,
-        only the (value-preserving) reshape differs."""
-        vals = self.codebook()[self.codes.astype(jnp.int32)]
+        only nibble expansion and the (value-preserving) reshape differ."""
+        vals = self.codebook()[self.unpacked_codes().astype(jnp.int32)]
         s = jnp.repeat(self.scales.astype(jnp.float32), self.block, axis=-1)
         return (vals * s).reshape(self.shape).astype(self.dtype)
 

@@ -2,14 +2,28 @@
 hot-spot.
 
 Decode is HBM-bandwidth-bound: weights stream once per token. Packed 4/8-bit
-codes cut the stream by 2–4× vs bf16 — this kernel realises the paper's
+codes cut the stream by 4–8× vs bf16 — this kernel realises the paper's
 formats as a bandwidth win by dequantising in VMEM *after* the HBM read,
 feeding the MXU at bf16 without ever materialising the bf16 weight in HBM.
 
-Tiling: grid (M/TM, N/TN, K/TK), k innermost for revolving f32 accumulation
-in VMEM. Per step: codes (TK, TN) uint8 + scales (TK, TN/128) stream in;
-dequant = one-hot(codes) @ codebook (an MXU-friendly LUT expansion) × scale;
-then x_tile (TM, TK) @ w_tile (TK, TN) on the MXU.
+Two code layouts share one kernel body:
+
+  * ``bits=8`` — one uint8 per code, tile (TK, TN).
+  * ``bits=4`` — nibble-packed (two codes per byte along K, the
+    ``core.nibble`` per-K-tile half interleave): the HBM read is a
+    (TK/2, TN) byte tile, unpacked in VMEM by a shift/mask split into the
+    low- and high-nibble code tiles and a sublane concatenate back to
+    (TK, TN) — halving the weight stream again relative to uint8 codes.
+
+An optional leading dim batches the matmul over stacked experts (MoE
+serving) as an extra outer grid axis — expert weight stacks stream packed
+instead of being densified.
+
+Tiling: grid (E, M/TM, N/TN, K/TK), k innermost for revolving f32
+accumulation in VMEM. Per step: codes (TK/pack, TN) uint8 + scales
+(TK, TN/128) stream in; dequant = one-hot(codes) @ codebook (an
+MXU-friendly LUT expansion) × scale; then x_tile (TM, TK) @ w_tile (TK, TN)
+on the MXU.
 """
 from __future__ import annotations
 
@@ -20,63 +34,82 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.nibble import NIBBLE_K_TILE
+
 BLOCK = 128
 TILE_M = 128
-TILE_K = 256
+TILE_K = NIBBLE_K_TILE  # K tile == the nibble interleave tile (core.nibble)
 TILE_N = 256
 
 
 def _kernel(x_ref, codes_ref, scales_ref, cb_ref, o_ref, acc_ref, *,
-            block: int, n_codes: int):
-    @pl.when(pl.program_id(2) == 0)
+            block: int, n_codes: int, bits: int):
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    codes = codes_ref[...]                                  # (TK, TN) uint8
-    tk, tn = codes.shape
-    cb = cb_ref[...]                                        # (n_codes,)
+    c = codes_ref[0].astype(jnp.int32)              # (TK/pack, TN)
+    if bits == 4:
+        # in-VMEM nibble unpack: low nibbles are the K tile's first TK/2
+        # rows, high nibbles the second (per-tile half interleave), so the
+        # split is two vector ops + one sublane concat, no lane shuffles.
+        c = jnp.concatenate([c & 0xF, c >> 4], axis=0)
+    tk, tn = c.shape
+    cb = cb_ref[...]                                # (n_codes,)
     # LUT via one-hot matmul: MXU-shaped, avoids vector gather
-    onehot = (codes[..., None].astype(jnp.int32) ==
+    onehot = (c[..., None] ==
               jnp.arange(n_codes, dtype=jnp.int32)).astype(jnp.bfloat16)
     w = jax.lax.dot_general(
         onehot.reshape(tk * tn, n_codes), cb.astype(jnp.bfloat16)[:, None],
         (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32).reshape(tk, tn)
-    s = scales_ref[...].astype(jnp.float32)                 # (TK, TN/blk)
+    s = scales_ref[0].astype(jnp.float32)           # (TK, TN/blk)
     w = (w.reshape(tk, tn // block, block) * s[..., None]).reshape(tk, tn)
-    x = x_ref[...].astype(jnp.bfloat16)                     # (TM, TK)
+    x = x_ref[0].astype(jnp.bfloat16)               # (TM, TK)
     acc_ref[...] += jax.lax.dot_general(
         x, w.astype(jnp.bfloat16), (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
 
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block", "interpret", "out_dtype"))
+                   static_argnames=("block", "bits", "interpret", "out_dtype"))
 def dequant_matmul(x, codes, scales, codebook, block: int = BLOCK,
-                   interpret: bool = False, out_dtype=jnp.bfloat16):
-    """x (M, K) @ dequant(codes (K, N), scales (K, N/block)) → (M, N)."""
-    M, K = x.shape
-    K2, N = codes.shape
-    assert K == K2 and N % block == 0
+                   bits: int = 8, interpret: bool = False,
+                   out_dtype=jnp.bfloat16):
+    """x (*lead, M, K) @ dequant(codes, scales) → (*lead, M, N).
+
+    codes: (*lead, K, N) uint8, or (*lead, K // 2, N) nibble-packed bytes
+    when ``bits == 4``. scales: (*lead, K, N // block). ``lead`` is at most
+    one dim (stacked experts), batched as an outer grid axis."""
+    lead = x.ndim == 3
+    if not lead:
+        x, codes, scales = x[None], codes[None], scales[None]
+    E, M, K = x.shape
+    pack = 2 if bits == 4 else 1
+    assert codes.shape[0] == E and codes.shape[1] * pack == K
+    N = codes.shape[2]
+    assert N % block == 0
     tm, tk, tn = min(TILE_M, M), min(TILE_K, K), min(TILE_N, N)
     assert M % tm == 0 and K % tk == 0 and N % tn == 0 and tn % block == 0
+    assert tk % pack == 0
     n_codes = codebook.shape[0]
-    grid = (M // tm, N // tn, K // tk)
-    return pl.pallas_call(
-        functools.partial(_kernel, block=block, n_codes=n_codes),
+    grid = (E, M // tm, N // tn, K // tk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block=block, n_codes=n_codes, bits=bits),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((tk, tn // block), lambda i, j, k: (k, j)),
-            pl.BlockSpec((n_codes,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1, tm, tk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, tk // pack, tn), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, tk, tn // block), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((n_codes,), lambda e, i, j, k: (0,)),
         ],
-        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        out_specs=pl.BlockSpec((1, tm, tn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
         interpret=interpret,
     )(x, codes, scales, codebook)
+    return out if lead else out[0]

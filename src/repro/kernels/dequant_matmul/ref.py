@@ -1,14 +1,23 @@
 """Pure-jnp oracle for the fused dequantise-matmul kernel.
 
-y = x @ dequant(codes, scales): x (M, K) bf16; weight codes (K, N) uint8
-with scales (K, N/block) — blocks along the output (lane) dim."""
+y = x @ dequant(codes, scales): x (*lead, M, K) bf16; weight codes
+(*lead, K, N) uint8 — or (*lead, K // 2, N) nibble-packed bytes with
+``bits=4`` (the ``core.nibble`` layout) — with scales (*lead, K, N/block),
+blocks along the output (lane) dim. Nibble unpack restores the exact uint8
+codes, so the oracle is bit-identical across the two storage widths."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.nibble import unpack_nibbles
 
-def dequant_matmul_ref(x, codes, scales, codebook, block: int = 128):
-    K, N = codes.shape
-    w = codebook[codes.astype(jnp.int32)].reshape(K, N // block, block)
-    w = (w * scales[..., None]).reshape(K, N)
-    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+def dequant_matmul_ref(x, codes, scales, codebook, block: int = 128,
+                       bits: int = 8):
+    if bits == 4:
+        codes = unpack_nibbles(codes, 2 * codes.shape[-2])
+    *lead, K, N = codes.shape
+    w = codebook[codes.astype(jnp.int32)].reshape(*lead, K, N // block, block)
+    w = (w * scales[..., None]).reshape(*lead, K, N)
+    return jnp.einsum("...mk,...kn->...mn", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

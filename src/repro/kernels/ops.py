@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from .block_quant.block_quant import block_quant as _bq_pallas
 from .block_quant.ref import block_quant_ref, block_dequant_ref
+from .dequant_matmul.dequant_matmul import TILE_M as MATMUL_TILE_M
 from .dequant_matmul.dequant_matmul import dequant_matmul as _dqm_pallas
 from .dequant_matmul.ref import dequant_matmul_ref
 
@@ -38,30 +39,45 @@ def block_dequant(codes, scales, codebook, block: int = 128,
 
 
 def dequant_matmul(x, codes, scales, codebook, block: int = 128,
-                   interpret: bool | None = None):
-    """x @ dequant(codes, scales) — fused on TPU; oracle off-TPU."""
+                   bits: int = 8, interpret: bool | None = None):
+    """x @ dequant(codes, scales) — fused on TPU; oracle off-TPU.
+
+    ``bits=4``: codes are nibble-packed ((*lead, K//2, N) bytes, the
+    ``core.nibble`` layout) and unpacked in VMEM after the HBM read. An
+    optional leading dim batches over stacked experts (MoE serving)."""
     if interpret is None:
         interpret = not on_tpu()
     if interpret and not on_tpu():
-        return dequant_matmul_ref(x, codes, scales, codebook, block)
-    return _dqm_pallas(x, codes, scales, codebook, block=block,
+        return dequant_matmul_ref(x, codes, scales, codebook, block,
+                                  bits=bits)
+    return _dqm_pallas(x, codes, scales, codebook, block=block, bits=bits,
                        interpret=interpret)
 
 
-def dequant_matmul_interpret(x, codes, scales, codebook, block: int = 128):
-    return _dqm_pallas(x, codes, scales, codebook, block=block,
+def dequant_matmul_interpret(x, codes, scales, codebook, block: int = 128,
+                             bits: int = 8):
+    return _dqm_pallas(x, codes, scales, codebook, block=block, bits=bits,
                        interpret=True)
 
 
-def dequant_rows(codes, scales, codebook, block: int = 128,
-                 dtype=jnp.float32):
+def dequant_rows(codes, scales, codebook, block: int = 128, dtype=None,
+                 nibble=None):
     """Dequantise gathered rows of a packed weight (the embedding-lookup
     path: gather uint8 code rows + their scales, then expand — the full
     vocab×d table is never materialised in the serving dtype).
 
-    codes: (..., N) uint8; scales: (..., N // block); returns (..., N)."""
+    codes: (..., N) uint8; scales: (..., N // block); returns (..., N).
+
+    ``nibble`` (optional, (...,) int ∈ {0, 1}): the gathered code rows are
+    nibble-packed bytes; select each row's low/high nibble before the
+    codebook lookup. ``dtype=None`` keeps the legacy float32 output; callers
+    serving packed tensors pass the tensor/serving dtype so the activation
+    stream is not silently upcast."""
+    if nibble is not None:
+        shift = (nibble.astype(jnp.uint8) * jnp.uint8(4))[..., None]
+        codes = jnp.right_shift(codes, shift) & jnp.uint8(0xF)
     n = codes.shape[-1]
     vals = codebook[codes.astype(jnp.int32)]
     vals = vals.reshape(*codes.shape[:-1], n // block, block)
     out = vals * scales.astype(jnp.float32)[..., None]
-    return out.reshape(codes.shape).astype(dtype)
+    return out.reshape(codes.shape).astype(dtype or jnp.float32)

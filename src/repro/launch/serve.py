@@ -27,9 +27,10 @@ def main(argv=None):
     ap.add_argument("--quantise", default=None,
                     help="serve with weights quantised to this format spec")
     ap.add_argument("--packed", action="store_true",
-                    help="with --quantise: keep weights packed (uint8 codes "
-                         "+ block scales) and serve through dequant_matmul "
-                         "instead of materialising dense fake-quant weights")
+                    help="with --quantise: keep weights packed (codes — two "
+                         "per byte for ≤16-point codebooks — + block scales) "
+                         "and serve through dequant_matmul instead of "
+                         "materialising dense fake-quant weights")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--slots", type=int, default=4)

@@ -29,26 +29,58 @@ def linear(x, w, spec: str):
     Dense weights take the exact einsum the call site always used
     (bit-identical bf16 path). Packed weights route through the fused
     ``dequant_matmul`` kernel: x is flattened to (B·T, K) and the weight
-    stream stays uint8 codes + block scales end to end. ``x`` must be
-    (B, T, *k_dims) with the trailing dims contracting, which covers every
-    projection in the decode path."""
+    stream stays packed codes (nibble-packed bytes for 4-bit formats) +
+    block scales end to end. ``x`` must be (B, T, *k_dims) with the trailing
+    dims contracting, which covers every projection in the decode path."""
     if isinstance(w, PackedTensor):
         B, T = x.shape[0], x.shape[1]
-        K = w.codes.shape[-2]
-        y = kops.dequant_matmul(x.reshape(B * T, K), w.codes, w.scales,
-                                w.codebook(), block=w.block)
+        y = kops.dequant_matmul(x.reshape(B * T, w.k_dim), w.codes, w.scales,
+                                w.codebook(), block=w.block, bits=w.bits)
         return y.reshape(B, T, *w.out_shape)
     return jnp.einsum(spec, x, w.astype(x.dtype))
 
 
-def embed_lookup(w, tokens):
-    """Embedding row gather; packed tables dequantise only the gathered rows
-    (codes layout (V, D), scales (V, D//block) — D must tile by block)."""
+def expert_matmul(x, w, spec: str):
+    """Per-expert batched matmul: x (E, C, K) against a stacked expert
+    weight w (E, K, N) (``spec`` e.g. "ecd,edf->ecf"). Packed expert stacks
+    route through ``dequant_matmul``'s leading expert dim — the codes stream
+    packed per expert instead of densifying the whole stack. The dispatch
+    capacity C is whatever the router chose, so pad it up to the kernel's M
+    tile when it exceeds one tile (zero rows; sliced off the output) —
+    routing semantics stay bit-identical to the dense einsum path."""
     if isinstance(w, PackedTensor):
-        c = jnp.take(w.codes, tokens, axis=0)     # (B, T, D) uint8
+        C = x.shape[-2]
+        t = kops.MATMUL_TILE_M
+        pad = (-C) % t if C > t else 0
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        y = kops.dequant_matmul(x, w.codes, w.scales, w.codebook(),
+                                block=w.block, bits=w.bits)
+        return (y[:, :C] if pad else y).astype(x.dtype)
+    return jnp.einsum(spec, x, w.astype(x.dtype))
+
+
+def embed_lookup(w, tokens, dtype=None):
+    """Embedding row gather; packed tables dequantise only the gathered rows
+    (codes layout (V, D), scales (V, D//block) — D must tile by block).
+    Nibble-packed tables (bits=4) gather the byte row holding each token's
+    codes and select the right nibble per row (core.nibble row coords).
+
+    ``dtype``: output dtype (the serving dtype); defaults to the packed
+    tensor's own dtype / the dense table's dtype — no silent f32 upcast."""
+    if isinstance(w, PackedTensor):
+        out_dt = jnp.dtype(dtype if dtype is not None else w.dtype)
+        nib = None
+        c_rows = tokens
+        if w.bits == 4:
+            from repro.core.nibble import nibble_row_coords
+            c_rows, nib = nibble_row_coords(tokens, w.k_dim)
+        c = jnp.take(w.codes, c_rows, axis=0)     # (B, T, D) uint8
         s = jnp.take(w.scales, tokens, axis=0)    # (B, T, D // block)
-        return kops.dequant_rows(c, s, w.codebook(), block=w.block)
-    return jnp.take(w, tokens, axis=0)
+        return kops.dequant_rows(c, s, w.codebook(), block=w.block,
+                                 dtype=out_dt, nibble=nib)
+    out = jnp.take(w, tokens, axis=0)
+    return out if dtype is None else out.astype(dtype)
 
 # Activation sharding constraint, set by the launcher (dryrun/train drivers).
 # XLA SPMD propagates parameter shardings well, but scan-carried activations
@@ -338,7 +370,14 @@ def set_ep_mesh(mesh, batch_axes, model_axis="model"):
 
 
 def moe_block(x, p: MoeParams, cfg):
-    if _EP_MESH is not None:
+    # Packed expert stacks serve through the local sort-dispatch path (the
+    # EP shard_map path pads/casts expert weights, which would densify the
+    # codes; packed EP is a recorded follow-up). Packability is decided per
+    # tensor (output dim must tile by the scale block), so gate/up/down may
+    # mix packed and dense — any packed stack forces the local path.
+    packed = any(isinstance(w, PackedTensor)
+                 for w in (p.w_gate, p.w_up, p.w_down))
+    if _EP_MESH is not None and not packed:
         return moe_block_ep(x, p, cfg)
     return _moe_block_local(x, p, cfg)
 
@@ -376,12 +415,12 @@ def _moe_block_local(x, p: MoeParams, cfg):
     contrib = jnp.where(keep[:, None], xt[tok_idx], 0.0)
     buf = jnp.zeros((E, cap, D), x.dtype).at[expert_flat, safe_rank].add(contrib)
 
-    # per-expert SwiGLU
-    dt = x.dtype
-    g = jnp.einsum("ecd,edf->ecf", buf, p.w_gate.astype(dt))
-    u = jnp.einsum("ecd,edf->ecf", buf, p.w_up.astype(dt))
+    # per-expert SwiGLU (expert stacks may be PackedTensors: the codes
+    # stream per expert through dequant_matmul's leading dim)
+    g = expert_matmul(buf, p.w_gate, "ecd,edf->ecf")
+    u = expert_matmul(buf, p.w_up, "ecd,edf->ecf")
     h = jax.nn.silu(g) * u
-    y = jnp.einsum("ecf,efd->ecd", h, p.w_down.astype(dt))
+    y = expert_matmul(h, p.w_down, "ecf,efd->ecd")
 
     # combine: gather back and weight by the (renormalised) gate
     y_tok = y[expert_flat, safe_rank]                    # (N·k, D)

@@ -187,7 +187,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     pos = state["pos"]                                     # (B,)
     t_valid = batch.get("t_valid")
     adv = jnp.full((B,), T, jnp.int32) if t_valid is None else t_valid
-    x = embed_lookup(params["embed"], tokens).astype(dt)
+    x = embed_lookup(params["embed"], tokens, dtype=dt)
     positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
 
     windows = jnp.asarray(cfg.window_pattern())
@@ -240,13 +240,16 @@ def init(rng, cfg: ModelConfig):
 
 def pack_layouts(cfg: ModelConfig) -> dict:
     """Matmul layouts for serving from packed quantised weights: tensor path
-    → (n_lead, n_contract). Lead dims are scanned (layers); contraction dims
-    come next; the rest are output dims (blocked by the scale block size).
+    → (n_lead, n_contract). Lead dims are scanned (layers) or stacked
+    (experts); contraction dims come next; the rest are output dims (blocked
+    by the scale block size). MoE expert stacks carry (layers, experts) lead
+    dims and stream per expert through ``dequant_matmul``'s batched lead
+    axis inside ``moe_block``.
 
-    Not wired (left dense / dequantised by the engine): MoE expert stacks
-    and the router (routed through sort-based dispatch, not a plain matmul)
-    and tied embeddings (the unembed transpose contracts along the blocked
-    axis). Both are recorded ROADMAP items."""
+    Not wired (left dense / dequantised by the engine): the MoE router (a
+    tiny (D, E) matmul feeding top-k dispatch) and tied embeddings (the
+    unembed transpose contracts along the blocked axis — a recorded ROADMAP
+    item)."""
     lay = {
         "['layers']['wq']": (1, 1),
         "['layers']['wk']": (1, 1),
@@ -256,6 +259,18 @@ def pack_layouts(cfg: ModelConfig) -> dict:
         "['layers']['w_up']": (1, 1),
         "['layers']['w_down']": (1, 1),
     }
+    if cfg.n_experts:
+        lay.update({
+            "['layers']['we_gate']": (2, 1),
+            "['layers']['we_up']": (2, 1),
+            "['layers']['we_down']": (2, 1),
+        })
+        if cfg.n_shared_experts:
+            lay.update({
+                "['layers']['ws_gate']": (1, 1),
+                "['layers']['ws_up']": (1, 1),
+                "['layers']['ws_down']": (1, 1),
+            })
     if not cfg.tie_embeddings:
         # embed rows gather-dequantise (layers.embed_lookup); unembed is a
         # plain (D, V) matmul

@@ -11,10 +11,17 @@ Components
 
     * dense (bf16/f32) params — the bit-identical baseline path;
     * **packed** params (``ServeEngine.from_quantised``): each planned
-      tensor stays uint8 codes + bf16 block scales + codebook
-      (:class:`repro.core.PackedTensor`), and every matmul routes through
-      the fused ``kernels.ops.dequant_matmul`` (Pallas on TPU, jnp oracle
-      off-TPU). Embedding rows gather-dequantise on the fly.
+      tensor stays codes + bf16 block scales + codebook
+      (:class:`repro.core.PackedTensor`). Codebooks of ≤16 points store
+      **two codes per byte** (``bits=4``, the K-dim nibble interleave of
+      ``core.nibble``) — the paper's full ~4× resident/stream cut over
+      bf16, ~7.5× vs the f32 master — and every matmul routes through the
+      fused ``kernels.ops.dequant_matmul`` (Pallas on TPU with in-VMEM
+      nibble unpack, jnp oracle off-TPU). MoE expert stacks
+      (``we_gate``/``we_up``/``we_down``) stream per expert through the
+      kernel's batched lead dim inside ``moe_block`` instead of being
+      densified. Embedding rows gather-dequantise on the fly (byte row +
+      nibble select for 4-bit tables), honouring the serving dtype.
 
     Families with ``ModelFamily.supports_ragged`` (transformer, internvl)
     decode with **per-slot KV positions** and **batched chunked prefill**:
@@ -25,7 +32,12 @@ Components
 
     ``ServeEngine.weight_bytes()`` reports resident packed vs dense bytes;
     ``benchmarks/serve_packed.py`` measures tokens/s and weight bytes for
-    both paths.
+    both paths (and the MoE packed path) and emits the machine-readable
+    ``BENCH_serve.json`` perf record. Measured on paper-100m-small,
+    babsmax64:n4: resident weight bytes 0.133× of the f32 master (7.5×;
+    ≈ 3.75× over a bf16 copy — scales cost the remaining sliver), greedy
+    tokens identical to the dense path; qwen2-moe smoke 0.161× with expert
+    stacks packed.
 
 ``context_parallel``
     Flash-decode attention over a sequence-sharded KV cache (exact
@@ -33,9 +45,10 @@ Components
 
 Which tensors pack is declared per family (``ModelFamily.pack_layouts``)
 and checked per format (``QuantisationPlan.packable``): block-scaled
-codebooks of ≤256 codes whose output dim tiles by the scale block. The
-rest (MoE expert stacks, tied embeddings, tensor/channel-scaled or sparse
-formats) are dequantised at load — see ROADMAP open items.
+codebooks of ≤256 codes whose output dim tiles by the scale block; ≤16
+codes with an even contraction dim additionally nibble-pack to 4 bits.
+The rest (the MoE router, tied embeddings, tensor/channel-scaled or
+sparse formats) are dequantised at load — see ROADMAP open items.
 """
 from . import context_parallel, engine  # noqa: F401
 from .engine import Request, ServeEngine, greedy_generate

@@ -1,9 +1,10 @@
 """Serving engine: batched generation over fixed slots with continuous
 batching (finished sequences are replaced without stopping the batch), on
 bf16 or **packed-quantised** weights (the paper's formats as a serving
-feature: ~4× weight-stream reduction at 4 bits, realised by the fused
-dequant_matmul kernel — the weight stream stays uint8 codes + block scales
-end to end; no bf16 copy is ever materialised for packed tensors).
+feature: the full ~4× weight-stream cut over bf16 at 4 bits — two codes per
+byte, nibble-unpacked in VMEM by the fused dequant_matmul kernel — with the
+code stream + block scales resident end to end; no bf16 copy is ever
+materialised for packed tensors, including MoE expert stacks).
 
 Families with ``supports_ragged`` (transformer, internvl) run with per-slot
 KV positions and batched chunked prefill: slots admit ragged prompt lengths
@@ -75,9 +76,11 @@ class ServeEngine:
         """Build an engine from a quantised checkpoint.
 
         ``packed=True`` (default) keeps every packable planned tensor in its
-        quantised form — uint8 codes + block scales + codebook, carried as
+        quantised form — codes (nibble-packed, two per byte, for ≤16-point
+        codebooks) + block scales + codebook, carried as
         :class:`PackedTensor` leaves — and serves through the fused
-        ``dequant_matmul`` path. Tensors the family has no matmul layout for
+        ``dequant_matmul`` path; MoE expert stacks stream per expert through
+        its batched lead dim. Tensors the family has no matmul layout for
         (or whose format is not block-scaled ≤8-bit) are dequantised, as is
         everything when the family declares no layouts at all."""
         layouts = getattr(get_family(cfg.family), "pack_layouts", None)
