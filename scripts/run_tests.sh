@@ -6,8 +6,10 @@
 #   scripts/run_tests.sh --all      full tier-1 suite
 #   scripts/run_tests.sh --kernels  interpret-mode Pallas kernel smoke:
 #                                   runs the kernel bodies (block_quant +
-#                                   dequant_matmul incl. nibble-packed)
-#                                   against the jnp oracles
+#                                   dequant_matmul incl. nibble-packed and
+#                                   the transposed tied-embeddings variant
+#                                   dequant_matmul_t) against the jnp
+#                                   oracles
 #   scripts/run_tests.sh [pytest args...]   extra args forwarded to pytest
 #
 # Works offline: tests/conftest.py shims `hypothesis` when it is missing.

@@ -24,6 +24,16 @@ accumulation in VMEM. Per step: codes (TK/pack, TN) uint8 + scales
 (TK, TN/128) stream in; dequant = one-hot(codes) @ codebook (an
 MXU-friendly LUT expansion) × scale; then x_tile (TM, TK) @ w_tile (TK, TN)
 on the MXU.
+
+``dequant_matmul_t`` is the **transposed** variant: y = x @ dequant(W).T
+for codes stored (V, D) with scales blocked along D — the contraction now
+runs along the *blocked* axis. This is the tied-embeddings unembed: the
+packed ``embed`` table (codes (V, D), gather-ready for lookups) serves the
+logits matmul directly, so ``unembed = embed.T`` never materialises. The
+dequant tile body (nibble unpack + one-hot LUT + block scale) is shared;
+only the contracting MXU dims and the grid axis roles differ: the output
+axis walks the codes' (possibly nibble-packed) row dim and the accumulated
+axis walks the blocked column dim.
 """
 from __future__ import annotations
 
@@ -42,29 +52,37 @@ TILE_K = NIBBLE_K_TILE  # K tile == the nibble interleave tile (core.nibble)
 TILE_N = 256
 
 
+def _dequant_tile(c, s, cb, *, block: int, n_codes: int, bits: int):
+    """Shared dequant body: packed code tile → bf16-ready weight tile.
+
+    c: (R/pack, C) int32 codes (R rows restored if nibble-packed);
+    s: (R, C/block) scales, blocks along the tile's last axis;
+    returns (R, C) f32 dequantised weights."""
+    if bits == 4:
+        # in-VMEM nibble unpack: low nibbles are the row tile's first R/2
+        # rows, high nibbles the second (per-tile half interleave), so the
+        # split is two vector ops + one sublane concat, no lane shuffles.
+        c = jnp.concatenate([c & 0xF, c >> 4], axis=0)
+    r, n = c.shape
+    # LUT via one-hot matmul: MXU-shaped, avoids vector gather
+    onehot = (c[..., None] ==
+              jnp.arange(n_codes, dtype=jnp.int32)).astype(jnp.bfloat16)
+    w = jax.lax.dot_general(
+        onehot.reshape(r * n, n_codes), cb.astype(jnp.bfloat16)[:, None],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(r, n)
+    s = s.astype(jnp.float32)
+    return (w.reshape(r, n // block, block) * s[..., None]).reshape(r, n)
+
+
 def _kernel(x_ref, codes_ref, scales_ref, cb_ref, o_ref, acc_ref, *,
             block: int, n_codes: int, bits: int):
     @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    c = codes_ref[0].astype(jnp.int32)              # (TK/pack, TN)
-    if bits == 4:
-        # in-VMEM nibble unpack: low nibbles are the K tile's first TK/2
-        # rows, high nibbles the second (per-tile half interleave), so the
-        # split is two vector ops + one sublane concat, no lane shuffles.
-        c = jnp.concatenate([c & 0xF, c >> 4], axis=0)
-    tk, tn = c.shape
-    cb = cb_ref[...]                                # (n_codes,)
-    # LUT via one-hot matmul: MXU-shaped, avoids vector gather
-    onehot = (c[..., None] ==
-              jnp.arange(n_codes, dtype=jnp.int32)).astype(jnp.bfloat16)
-    w = jax.lax.dot_general(
-        onehot.reshape(tk * tn, n_codes), cb.astype(jnp.bfloat16)[:, None],
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).reshape(tk, tn)
-    s = scales_ref[0].astype(jnp.float32)           # (TK, TN/blk)
-    w = (w.reshape(tk, tn // block, block) * s[..., None]).reshape(tk, tn)
+    w = _dequant_tile(codes_ref[0].astype(jnp.int32), scales_ref[0],
+                      cb_ref[...], block=block, n_codes=n_codes, bits=bits)
     x = x_ref[0].astype(jnp.bfloat16)               # (TM, TK)
     acc_ref[...] += jax.lax.dot_general(
         x, w.astype(jnp.bfloat16), (((1,), (0,)), ((), ())),
@@ -113,3 +131,64 @@ def dequant_matmul(x, codes, scales, codebook, block: int = BLOCK,
         interpret=interpret,
     )(x, codes, scales, codebook)
     return out if lead else out[0]
+
+
+def _kernel_t(x_ref, codes_ref, scales_ref, cb_ref, o_ref, acc_ref, *,
+              block: int, n_codes: int, bits: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # w tile is (TV, TD) in the codes layout; the contraction runs along
+    # its *last* (blocked) axis, so the MXU call contracts dim 1 of both
+    # operands instead of transposing the tile.
+    w = _dequant_tile(codes_ref[...].astype(jnp.int32), scales_ref[...],
+                      cb_ref[...], block=block, n_codes=n_codes, bits=bits)
+    x = x_ref[...].astype(jnp.bfloat16)             # (TM, TD)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w.astype(jnp.bfloat16), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "bits", "interpret", "out_dtype"))
+def dequant_matmul_t(x, codes, scales, codebook, block: int = BLOCK,
+                     bits: int = 8, interpret: bool = False,
+                     out_dtype=jnp.bfloat16):
+    """x (M, D) @ dequant(codes, scales).T → (M, V): contraction along the
+    **blocked** axis (tied-embeddings unembed).
+
+    codes: (V, D) uint8, or (V // 2, D) nibble-packed bytes when
+    ``bits == 4`` (the ``core.nibble`` interleave along V — the same layout
+    ``embed_lookup`` gathers rows from). scales: (V, D // block), blocks
+    along D. The output-rows tile equals the nibble interleave tile so the
+    in-VMEM unpack of the V axis stays the two-op split + sublane concat."""
+    M, D = x.shape
+    pack = 2 if bits == 4 else 1
+    V = codes.shape[0] * pack
+    assert codes.shape[1] == D and scales.shape == (V, D // block)
+    tm = min(TILE_M, M)
+    tv = min(TILE_K, V)   # output rows walk the (nibble-interleaved) V axis
+    td = min(TILE_N, D)
+    assert M % tm == 0 and V % tv == 0 and D % td == 0 and td % block == 0
+    assert tv % pack == 0
+    n_codes = codebook.shape[0]
+    grid = (M // tm, V // tv, D // td)
+    return pl.pallas_call(
+        functools.partial(_kernel_t, block=block, n_codes=n_codes, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, td), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tv // pack, td), lambda i, j, k: (j, k)),
+            pl.BlockSpec((tv, td // block), lambda i, j, k: (j, k)),
+            pl.BlockSpec((n_codes,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tv), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, V), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tv), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, scales, codebook)

@@ -21,3 +21,19 @@ def dequant_matmul_ref(x, codes, scales, codebook, block: int = 128,
     w = (w * scales[..., None]).reshape(*lead, K, N)
     return jnp.einsum("...mk,...kn->...mn", x.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(x.dtype)
+
+
+def dequant_matmul_t_ref(x, codes, scales, codebook, block: int = 128,
+                         bits: int = 8):
+    """Transposed variant: y = x @ dequant(codes, scales).T, contracting
+    along the blocked axis. x (M, D); codes (V, D) uint8 — or (V // 2, D)
+    nibble-packed bytes along V with ``bits=4`` — scales (V, D // block).
+    The nibble unpack restores the exact uint8 codes, so the oracle is
+    bit-identical across the two storage widths."""
+    if bits == 4:
+        codes = unpack_nibbles(codes, 2 * codes.shape[-2])
+    V, D = codes.shape
+    w = codebook[codes.astype(jnp.int32)].reshape(V, D // block, block)
+    w = (w * scales[..., None]).reshape(V, D)
+    return jnp.einsum("md,vd->mv", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

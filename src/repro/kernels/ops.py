@@ -10,7 +10,8 @@ from .block_quant.block_quant import block_quant as _bq_pallas
 from .block_quant.ref import block_quant_ref, block_dequant_ref
 from .dequant_matmul.dequant_matmul import TILE_M as MATMUL_TILE_M
 from .dequant_matmul.dequant_matmul import dequant_matmul as _dqm_pallas
-from .dequant_matmul.ref import dequant_matmul_ref
+from .dequant_matmul.dequant_matmul import dequant_matmul_t as _dqmt_pallas
+from .dequant_matmul.ref import dequant_matmul_ref, dequant_matmul_t_ref
 
 
 def on_tpu() -> bool:
@@ -58,6 +59,27 @@ def dequant_matmul_interpret(x, codes, scales, codebook, block: int = 128,
                              bits: int = 8):
     return _dqm_pallas(x, codes, scales, codebook, block=block, bits=bits,
                        interpret=True)
+
+
+def dequant_matmul_t(x, codes, scales, codebook, block: int = 128,
+                     bits: int = 8, interpret: bool | None = None):
+    """x @ dequant(codes, scales).T — contraction along the **blocked**
+    axis (the tied-embeddings unembed: the packed embed table (V, D) serves
+    the logits matmul without materialising its transpose). Fused on TPU;
+    oracle off-TPU. ``bits=4``: codes nibble-packed along V."""
+    if interpret is None:
+        interpret = not on_tpu()
+    if interpret and not on_tpu():
+        return dequant_matmul_t_ref(x, codes, scales, codebook, block,
+                                    bits=bits)
+    return _dqmt_pallas(x, codes, scales, codebook, block=block, bits=bits,
+                        interpret=interpret)
+
+
+def dequant_matmul_t_interpret(x, codes, scales, codebook, block: int = 128,
+                               bits: int = 8):
+    return _dqmt_pallas(x, codes, scales, codebook, block=block, bits=bits,
+                        interpret=True)
 
 
 def dequant_rows(codes, scales, codebook, block: int = 128, dtype=None,

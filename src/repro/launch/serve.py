@@ -52,16 +52,24 @@ def main(argv=None):
         plan = build_plan(params, args.quantise)
         bits = plan.bits_per_param(params)
         if args.packed:
+            # fails fast (ValueError naming the family) when the family
+            # declares an empty pack layout
             eng = ServeEngine.from_quantised(
                 cfg, plan.quantise(params), plan, batch_slots=args.slots,
                 kv_len=args.kv_len, prefill_chunk=args.prefill_chunk)
             wb = eng.weight_bytes()
             if wb["packed"] == 0:
-                print(f"[serve] WARNING: {cfg.family!r} has no pack layouts "
-                      f"— serving dequantised dense weights")
+                # the family has layouts but the format rejected every
+                # tensor (QuantisationPlan.packable: block-scaled ≤256-code
+                # codebooks, no sparse outliers, output tiling by the block)
+                raise SystemExit(
+                    f"[serve] --packed: no tensor of {cfg.family!r} packs "
+                    f"under format {args.quantise!r} — use a block-scaled "
+                    "codebook format, or drop --packed to serve dense")
             print(f"[serve] packed {args.quantise} ({bits:.2f} bits/param): "
-                  f"{wb['packed']:,} packed + {wb['dense']:,} dense bytes "
-                  f"resident")
+                  f"{wb['packed']:,} packed ({wb['codes']:,} codes + "
+                  f"{wb['scales']:,} scales + {wb['codebooks']:,} codebooks)"
+                  f" + {wb['dense']:,} dense bytes resident")
         else:
             params = plan.fake_quant(params)
             print(f"[serve] weights quantised to {args.quantise} "

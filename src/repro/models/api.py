@@ -117,8 +117,41 @@ class ModelConfig:
 _FAMILIES: Dict[str, "ModelFamily"] = {}
 
 
+def empty_pack_layouts(cfg) -> Dict[str, tuple]:
+    """The explicit "this family cannot serve packed" declaration.
+
+    Every family must declare its packed-serving surface; a family with no
+    packable tensor registers this (rather than omitting the field) so
+    serving dense is a visible decision, not a silent fallback —
+    ``ServeEngine.from_quantised(packed=True)`` fails fast on it."""
+    return {}
+
+
 @dataclass
 class ModelFamily:
+    """One architecture family's full contract with the system.
+
+    Weight application inside ``apply``/``decode_step`` must go through the
+    unified projection API (``models.layers.linear`` /
+    ``layers.embed_lookup`` / ``layers.expert_matmul``) — never a raw
+    ``jnp.einsum`` against a parameter — so any tensor the family declares
+    in ``pack_layouts`` serves straight from packed quantised codes with no
+    per-family special cases.
+
+    ``pack_layouts(cfg) -> {tensor-path: (n_lead, n_contract)}`` declares,
+    per parameter, how its axes map onto the ``dequant_matmul`` codes
+    layout: ``n_lead`` leading stack dims (scanned layers / expert stacks),
+    then ``n_contract`` contraction dims, the rest output dims (blocked by
+    the scale block). An embedding table declares ``(0, 1)``: its rows both
+    gather (``embed_lookup``) and, when embeddings are tied, serve the
+    unembed matmul through the transposed kernel variant — the contraction
+    then runs along the blocked axis and no dense transpose is ever
+    materialised. The field is **required**: a family that truly cannot
+    pack registers :func:`empty_pack_layouts`, and the engine fails fast
+    instead of silently serving dense. ``QuantisationPlan.packable``
+    separately gates each tensor per format (block-scaled ≤256-code
+    codebooks, no sparse outliers, output tiling by the scale block)."""
+
     name: str
     param_specs: Callable           # (cfg) -> tree[ParamSpec]
     init: Callable                  # (rng, cfg) -> params
@@ -134,11 +167,16 @@ class ModelFamily:
     # padding and batched chunked prefill in serve.engine. Families without
     # it are driven on the legacy lockstep path.
     supports_ragged: bool = False
-    # pack_layouts: (cfg) -> {tensor-path: (n_lead, n_contract)} matmul
-    # layouts for serving straight from packed quantised weights
-    # (QuantisationPlan.pack_quantised). None = family not wired; the engine
-    # falls back to dequantised weights.
+    # pack_layouts: required — see the class docstring. Declared last for
+    # dataclass field ordering; validated at registration.
     pack_layouts: Callable = None
+
+    def __post_init__(self):
+        if self.pack_layouts is None:
+            raise ValueError(
+                f"ModelFamily {self.name!r}: pack_layouts is required — "
+                "declare the packed-serving matmul layouts, or register "
+                "models.api.empty_pack_layouts for a family with none")
 
 
 def register_family(fam: ModelFamily):

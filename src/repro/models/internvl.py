@@ -30,11 +30,11 @@ def param_specs(cfg: ModelConfig) -> dict:
 
 def _project_vis(params, vis, cfg):
     dt = jnp.dtype(cfg.dtype)
-    from .layers import rms_norm
+    from .layers import linear, rms_norm
     h = rms_norm(vis.astype(dt), params["vis_norm"], cfg.norm_eps)
-    h = jnp.einsum("bnd,de->bne", h, params["vis_proj1"].astype(dt))
+    h = linear(h, params["vis_proj1"], "bnd,de->bne")
     h = jax.nn.gelu(h)
-    return jnp.einsum("bne,ef->bnf", h, params["vis_proj2"].astype(dt))
+    return linear(h, params["vis_proj2"], "bne,ef->bnf")
 
 
 def apply(params, batch, cfg: ModelConfig):

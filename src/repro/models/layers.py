@@ -7,6 +7,7 @@ batch to ("pod","data").
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -20,8 +21,37 @@ NEG_INF = -1e30
 
 
 # ---------------------------------------------------------------------------
-# Packed-weight dispatch (the serving path of the paper's formats)
+# Packed-weight dispatch (the paper's formats as THE projection API)
 # ---------------------------------------------------------------------------
+#
+# `linear(x, w, spec)` is the single way any model family multiplies an
+# activation by a parameter. The einsum spec both documents the dense
+# semantics and drives the packed dispatch: from the weight's subscripts we
+# derive which of its axes contract, and route PackedTensors through the
+# fused dequant_matmul kernel — the normal variant when the contraction runs
+# along the codes' row (K) axis, the transposed variant when it runs along
+# the blocked output axis (tied embeddings: "btd,vd->btv" against the packed
+# (V, D) embed table). Dense weights take the exact einsum the call site
+# always used (bit-identical path).
+
+@functools.lru_cache(maxsize=None)
+def _spec_orientation(spec: str) -> str:
+    """Classify the weight operand of ``spec``: do its contracting labels
+    lead ("normal", the dequant_matmul codes layout lead+K+out) or trail
+    ("transposed", out+K — contraction along the blocked axis)?"""
+    ins, out = spec.replace(" ", "").split("->")
+    xs, ws = ins.split(",")
+    batch = "".join(c for c in ws if c in xs and c in out)
+    contract = "".join(c for c in ws if c in xs and c not in out)
+    wout = "".join(c for c in ws if c not in xs)
+    if not contract:
+        raise ValueError(f"no contraction in spec {spec!r}")
+    if ws == batch + contract + wout:
+        return "normal"
+    if ws == batch + wout + contract:
+        return "transposed"
+    raise ValueError(f"cannot orient weight subscripts in spec {spec!r}")
+
 
 def linear(x, w, spec: str):
     """``einsum(spec, x, w)`` where ``w`` may be a :class:`PackedTensor`.
@@ -31,9 +61,20 @@ def linear(x, w, spec: str):
     ``dequant_matmul`` kernel: x is flattened to (B·T, K) and the weight
     stream stays packed codes (nibble-packed bytes for 4-bit formats) +
     block scales end to end. ``x`` must be (B, T, *k_dims) with the trailing
-    dims contracting, which covers every projection in the decode path."""
+    dims contracting, which covers every projection in the decode path.
+
+    A spec whose weight subscripts end with the contracting labels (e.g.
+    ``"btd,vd->btv"``) contracts along the packed tensor's blocked output
+    axis and dispatches the transposed kernel — the tied-embeddings unembed
+    serves straight from the packed embed table, never materialising
+    ``embed.T``."""
     if isinstance(w, PackedTensor):
         B, T = x.shape[0], x.shape[1]
+        if _spec_orientation(spec) == "transposed":
+            n = int(np.prod(w.out_shape))
+            y = kops.dequant_matmul_t(x.reshape(B * T, n), w.codes, w.scales,
+                                      w.codebook(), block=w.block, bits=w.bits)
+            return y.reshape(B, T, w.k_dim)
         y = kops.dequant_matmul(x.reshape(B * T, w.k_dim), w.codes, w.scales,
                                 w.codebook(), block=w.block, bits=w.bits)
         return y.reshape(B, T, *w.out_shape)
@@ -341,9 +382,8 @@ def swiglu(x, p: MlpParams):
 
 
 def gelu_mlp(x, w_in, w_out):
-    dt = x.dtype
-    h = jax.nn.gelu(jnp.einsum("btd,df->btf", x, w_in.astype(dt)))
-    return jnp.einsum("btf,fd->btd", h, w_out.astype(dt))
+    h = jax.nn.gelu(linear(x, w_in, "btd,df->btf"))
+    return linear(h, w_out, "btf,fd->btd")
 
 
 class MoeParams(NamedTuple):
@@ -369,6 +409,9 @@ def set_ep_mesh(mesh, batch_axes, model_axis="model"):
                 model_axis) if mesh is not None else None
 
 
+_EP_PACKED_FALLBACK_LOGGED = False
+
+
 def moe_block(x, p: MoeParams, cfg):
     # Packed expert stacks serve through the local sort-dispatch path (the
     # EP shard_map path pads/casts expert weights, which would densify the
@@ -379,6 +422,13 @@ def moe_block(x, p: MoeParams, cfg):
                  for w in (p.w_gate, p.w_up, p.w_down))
     if _EP_MESH is not None and not packed:
         return moe_block_ep(x, p, cfg)
+    if _EP_MESH is not None and packed:
+        global _EP_PACKED_FALLBACK_LOGGED
+        if not _EP_PACKED_FALLBACK_LOGGED:
+            _EP_PACKED_FALLBACK_LOGGED = True
+            print("[moe] packed expert stacks: EP shard_map path falls back "
+                  "to local sort-dispatch (packed expert-parallel dispatch "
+                  "is a recorded follow-up)")
     return _moe_block_local(x, p, cfg)
 
 

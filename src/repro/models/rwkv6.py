@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from .api import ModelConfig, ModelFamily, ParamSpec, register_family
-from .layers import rms_norm
+from .layers import embed_lookup, linear, rms_norm
 
 LORA_R = 64
 HEAD_DIM = 64
@@ -180,15 +180,14 @@ def time_mix(x, lp, cfg, last_x=None, s0=None):
     def lerp(mu):
         return x + (xs - x) * mu.astype(dt)
 
-    r = jnp.einsum("btd,de->bte", lerp(lp["mu_r"]), lp["wr"].astype(dt))
-    k = jnp.einsum("btd,de->bte", lerp(lp["mu_k"]), lp["wk"].astype(dt))
-    v = jnp.einsum("btd,de->bte", lerp(lp["mu_v"]), lp["wv"].astype(dt))
-    g = jnp.einsum("btd,de->bte", lerp(lp["mu_g"]), lp["wg"].astype(dt))
+    r = linear(lerp(lp["mu_r"]), lp["wr"], "btd,de->bte")
+    k = linear(lerp(lp["mu_k"]), lp["wk"], "btd,de->bte")
+    v = linear(lerp(lp["mu_v"]), lp["wv"], "btd,de->bte")
+    g = linear(lerp(lp["mu_g"]), lp["wg"], "btd,de->bte")
     # data-dependent decay (the Finch contribution)
-    w_lora = jnp.einsum("btr,rd->btd",
-                        jnp.tanh(jnp.einsum("btd,dr->btr", lerp(lp["mu_w"]),
-                                            lp["w_lora_a"].astype(dt))),
-                        lp["w_lora_b"].astype(dt))
+    w_lora = linear(jnp.tanh(linear(lerp(lp["mu_w"]), lp["w_lora_a"],
+                                    "btd,dr->btr")),
+                    lp["w_lora_b"], "btr,rd->btd")
     w = jnp.exp(-jnp.exp((lp["w0"].astype(jnp.float32) +
                           w_lora.astype(jnp.float32))))
     hsplit = lambda a: a.reshape(B, T, H, hd)
@@ -199,7 +198,7 @@ def time_mix(x, lp, cfg, last_x=None, s0=None):
                    hsplit(w.astype(dt)), lp["bonus_u"], s0)
     y = _group_norm(y, lp["ln_x"], cfg.norm_eps)
     y = y * jax.nn.silu(g)
-    out = jnp.einsum("btd,de->bte", y.astype(dt), lp["wo"].astype(dt))
+    out = linear(y.astype(dt), lp["wo"], "btd,de->bte")
     return out, (x[:, -1], s_fin)
 
 
@@ -208,17 +207,16 @@ def channel_mix(x, lp, cfg, last_x=None):
     xs = _shift(x, last_x)
     xk = x + (xs - x) * lp["mu_ck"].astype(dt)
     xr = x + (xs - x) * lp["mu_cr"].astype(dt)
-    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, lp["wcr"].astype(dt)))
-    k = jnp.square(jax.nn.relu(
-        jnp.einsum("btd,df->btf", xk, lp["wck"].astype(dt))))
-    out = r * jnp.einsum("btf,fd->btd", k, lp["wcv"].astype(dt))
+    r = jax.nn.sigmoid(linear(xr, lp["wcr"], "btd,de->bte"))
+    k = jnp.square(jax.nn.relu(linear(xk, lp["wck"], "btd,df->btf")))
+    out = r * linear(k, lp["wcv"], "btf,fd->btd")
     return out, x[:, -1]
 
 
 def apply(params, batch, cfg: ModelConfig):
     tokens = batch["tokens"]
     dt = jnp.dtype(cfg.dtype)
-    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = embed_lookup(params["embed"], tokens, dtype=dt)
 
     def body(x, lp):
         from .layers import constrain_act
@@ -231,7 +229,7 @@ def apply(params, batch, cfg: ModelConfig):
     body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
     x, _ = jax.lax.scan(body_fn, x, params["layers"])
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(dt))
+    logits = linear(x, params["unembed"], "btd,dv->btv")
     return logits.astype(jnp.float32)
 
 
@@ -255,7 +253,7 @@ def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
 def decode_step(params, state, batch, cfg: ModelConfig):
     tokens = batch["tokens"]  # (B, 1)
     dt = jnp.dtype(cfg.dtype)
-    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = embed_lookup(params["embed"], tokens, dtype=dt)
 
     def body(x, inputs):
         lp, tm_x, cm_x, s = inputs
@@ -273,7 +271,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
         body, x, (params["layers"], state["tm_x"], state["cm_x"],
                   state["wkv"]))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(dt))
+    logits = linear(x, params["unembed"], "btd,dv->btv")
     new_state = {"tm_x": tm, "cm_x": cm, "wkv": wkv, "pos": state["pos"] + 1}
     return logits.astype(jnp.float32), new_state
 
@@ -291,6 +289,19 @@ def init(rng, cfg: ModelConfig):
     return params
 
 
+def pack_layouts(cfg: ModelConfig) -> dict:
+    """Packed-serving layouts: every projection in time-mix (r/k/v/g, the
+    decay LoRA pair, the output) and channel-mix, plus embed/unembed. The
+    token-shift lerp coefficients, decay bias and group-norm gains are
+    elementwise vectors — below the quantisable floor, never packed."""
+    lay = {f"['layers']['{n}']": (1, 1)
+           for n in ("wr", "wk", "wv", "wg", "wo",
+                     "w_lora_a", "w_lora_b", "wck", "wcv", "wcr")}
+    lay["['embed']"] = (0, 1)
+    lay["['unembed']"] = (0, 1)
+    return lay
+
+
 register_family(ModelFamily(
     name="rwkv6",
     param_specs=param_specs,
@@ -299,4 +310,5 @@ register_family(ModelFamily(
     decode_state_specs=decode_state_specs,
     decode_step=decode_step,
     prefill=apply,
+    pack_layouts=pack_layouts,
 ))

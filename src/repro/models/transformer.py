@@ -132,16 +132,25 @@ def apply(params, batch, cfg: ModelConfig):
     tokens = batch["tokens"]
     B, T = tokens.shape
     dt = jnp.dtype(cfg.dtype)
-    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = embed_lookup(params["embed"], tokens, dtype=dt)
     if "vis_embed" in batch:  # VLM: prepend projected patch embeddings
         x = jnp.concatenate([batch["vis_embed"].astype(dt), x], axis=1)
         T = x.shape[1]
     positions = jnp.arange(T)
     x, aux = _scan_layers(cfg, x, params["layers"], positions)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
-    logits = jnp.einsum("btd,dv->btv", x, unembed.astype(dt))
+    logits = _unembed(x, params, cfg)
     return logits.astype(jnp.float32)
+
+
+def _unembed(x, params, cfg: ModelConfig):
+    """Logits projection through the unified `linear`. Tied embeddings
+    contract the (V, D) embed table along its blocked axis (the transposed
+    spec) — packed tables serve via dequant_matmul_t, and the dense path's
+    einsum never materialises ``embed.T`` either."""
+    if cfg.tie_embeddings:
+        return linear(x, params["embed"], "btd,vd->btv")
+    return linear(x, params["unembed"], "btd,dv->btv")
 
 
 # ---------------------------------------------------------------------------
@@ -221,8 +230,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     new_state = {"k": k_new, "v": v_new, "pos": pos + adv}
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
-    logits = linear(x, unembed, "btd,dv->btv")
+    logits = _unembed(x, params, cfg)
     return logits.astype(jnp.float32), new_state
 
 
@@ -246,10 +254,12 @@ def pack_layouts(cfg: ModelConfig) -> dict:
     dims and stream per expert through ``dequant_matmul``'s batched lead
     axis inside ``moe_block``.
 
-    Not wired (left dense / dequantised by the engine): the MoE router (a
-    tiny (D, E) matmul feeding top-k dispatch) and tied embeddings (the
-    unembed transpose contracts along the blocked axis — a recorded ROADMAP
-    item)."""
+    The embedding table always packs, tied or not: rows gather-dequantise
+    through ``embed_lookup``, and with ``tie_embeddings`` the same packed
+    (V, D) table serves the logits matmul through the transposed
+    ``dequant_matmul_t`` (contraction along the blocked axis — no dense
+    unembed is ever materialised). Only the MoE router stays dense (a tiny
+    (D, E) matmul feeding top-k dispatch)."""
     lay = {
         "['layers']['wq']": (1, 1),
         "['layers']['wk']": (1, 1),
@@ -271,10 +281,10 @@ def pack_layouts(cfg: ModelConfig) -> dict:
                 "['layers']['ws_up']": (1, 1),
                 "['layers']['ws_down']": (1, 1),
             })
+    # embed rows gather-dequantise (layers.embed_lookup); tied configs also
+    # consume the same packed table transposed for logits
+    lay["['embed']"] = (0, 1)
     if not cfg.tie_embeddings:
-        # embed rows gather-dequantise (layers.embed_lookup); unembed is a
-        # plain (D, V) matmul
-        lay["['embed']"] = (0, 1)
         lay["['unembed']"] = (0, 1)
     return lay
 

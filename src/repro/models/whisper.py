@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from .api import ModelConfig, ModelFamily, ParamSpec, register_family
-from .layers import (AttnParams, decode_attention, flash_attention,
-                     gelu_mlp, qkv_project)
+from .layers import (AttnParams, decode_attention, embed_lookup,
+                     flash_attention, gelu_mlp, linear, qkv_project)
 
 
 def layer_norm(x, gain, eps: float = 1e-5):
@@ -68,7 +68,7 @@ def _enc_layer(x, lp, positions, cfg):
     q, k, v = qkv_project(h, ap, positions, cfg, rope_on=False)
     o = flash_attention(q, k, v, positions, positions, causal=False,
                         chunk=cfg.attn_chunk)
-    x = x + jnp.einsum("btnh,nhd->btd", o, ap.wo.astype(o.dtype))
+    x = x + linear(o, ap.wo, "btnh,nhd->btd")
     h = layer_norm(x, lp["mlp_norm"], cfg.norm_eps)
     return x + gelu_mlp(h, lp["w_in"], lp["w_out"])
 
@@ -90,24 +90,23 @@ def encode(params, frames, cfg: ModelConfig):
 
 
 def _dec_layer(x, enc_out, lp, positions, enc_positions, cfg):
-    dt = x.dtype
     # causal self attention (RoPE)
     ap = AttnParams(lp["self_wq"], lp["self_wk"], lp["self_wv"], lp["self_wo"])
     h = layer_norm(x, lp["self_norm"], cfg.norm_eps)
     q, k, v = qkv_project(h, ap, positions, cfg, rope_on=True)
     o = flash_attention(q, k, v, positions, positions, causal=True,
                         chunk=cfg.attn_chunk)
-    x = x + jnp.einsum("btnh,nhd->btd", o, ap.wo.astype(dt))
+    x = x + linear(o, ap.wo, "btnh,nhd->btd")
     # cross attention
     cp = AttnParams(lp["cross_wq"], lp["cross_wk"], lp["cross_wv"],
                     lp["cross_wo"])
     h = layer_norm(x, lp["cross_norm"], cfg.norm_eps)
-    qc = jnp.einsum("btd,dnh->btnh", h, cp.wq.astype(dt))
-    kc = jnp.einsum("btd,dnh->btnh", enc_out, cp.wk.astype(dt))
-    vc = jnp.einsum("btd,dnh->btnh", enc_out, cp.wv.astype(dt))
+    qc = linear(h, cp.wq, "btd,dnh->btnh")
+    kc = linear(enc_out, cp.wk, "btd,dnh->btnh")
+    vc = linear(enc_out, cp.wv, "btd,dnh->btnh")
     oc = flash_attention(qc, kc, vc, positions, enc_positions, causal=False,
                          chunk=cfg.attn_chunk)
-    x = x + jnp.einsum("btnh,nhd->btd", oc, cp.wo.astype(dt))
+    x = x + linear(oc, cp.wo, "btnh,nhd->btd")
     h = layer_norm(x, lp["mlp_norm"], cfg.norm_eps)
     return x + gelu_mlp(h, lp["w_in"], lp["w_out"])
 
@@ -117,7 +116,7 @@ def apply(params, batch, cfg: ModelConfig):
     dt = jnp.dtype(cfg.dtype)
     enc_out = encode(params, batch["frames"], cfg)
     tokens = batch["tokens"]
-    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = embed_lookup(params["embed"], tokens, dtype=dt)
     positions = jnp.arange(tokens.shape[1])
     enc_positions = jnp.arange(enc_out.shape[1])
 
@@ -130,7 +129,9 @@ def apply(params, batch, cfg: ModelConfig):
     body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
     x, _ = jax.lax.scan(body_fn, x, params["dec"])
     x = layer_norm(x, params["dec_norm"], cfg.norm_eps)
-    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(dt))  # tied
+    # tied embeddings: the transposed spec contracts the (V, D) table along
+    # its blocked axis — packed tables serve via dequant_matmul_t
+    logits = linear(x, params["embed"], "btd,vd->btv")
     return logits.astype(jnp.float32)
 
 
@@ -155,7 +156,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     tokens = batch["tokens"]  # (B, 1)
     dt = jnp.dtype(cfg.dtype)
     pos = state["pos"]
-    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = embed_lookup(params["embed"], tokens, dtype=dt)
     positions = pos[None] + jnp.zeros((1,), jnp.int32)
 
     def body(x, inputs):
@@ -169,13 +170,13 @@ def decode_step(params, state, batch, cfg: ModelConfig):
         vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype),
                                                  pos, axis=1)
         o = decode_attention(q, kc, vc, pos)
-        x = x + jnp.einsum("btnh,nhd->btd", o, ap.wo.astype(o.dtype))
+        x = x + linear(o, ap.wo, "btnh,nhd->btd")
         cp = AttnParams(lp["cross_wq"], lp["cross_wk"], lp["cross_wv"],
                         lp["cross_wo"])
         h = layer_norm(x, lp["cross_norm"], cfg.norm_eps)
-        qc = jnp.einsum("btd,dnh->btnh", h, cp.wq.astype(dt))
+        qc = linear(h, cp.wq, "btd,dnh->btnh")
         oc = decode_attention(qc, xk, xv, jnp.int32(2**30))  # all enc visible
-        x = x + jnp.einsum("btnh,nhd->btd", oc, cp.wo.astype(dt))
+        x = x + linear(oc, cp.wo, "btnh,nhd->btd")
         h = layer_norm(x, lp["mlp_norm"], cfg.norm_eps)
         x = x + gelu_mlp(h, lp["w_in"], lp["w_out"])
         return x, (kc, vc)
@@ -183,7 +184,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     x, (k, v) = jax.lax.scan(body, x, (params["dec"], state["k"], state["v"],
                                        state["xk"], state["xv"]))
     x = layer_norm(x, params["dec_norm"], cfg.norm_eps)
-    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(dt))
+    logits = linear(x, params["embed"], "btd,vd->btv")  # tied, transposed
     new_state = dict(state, k=k, v=v, pos=pos + 1)
     return logits.astype(jnp.float32), new_state
 
@@ -191,6 +192,23 @@ def decode_step(params, state, batch, cfg: ModelConfig):
 def init(rng, cfg: ModelConfig):
     from .api import init_from_specs
     return init_from_specs(rng, param_specs(cfg))
+
+
+def pack_layouts(cfg: ModelConfig) -> dict:
+    """Packed-serving layouts over both stacks: encoder + decoder self
+    attention, decoder cross attention, the GELU MLPs, and the tied
+    embedding table — which serves the logits matmul transposed
+    (contraction along its blocked axis) with no dense unembed."""
+    lay = {}
+    for stack, prefixes in (("enc", ("self_",)), ("dec", ("self_", "cross_"))):
+        for pre in prefixes:
+            for n in ("wq", "wk", "wv"):
+                lay[f"['{stack}']['{pre}{n}']"] = (1, 1)
+            lay[f"['{stack}']['{pre}wo']"] = (1, 2)
+        lay[f"['{stack}']['w_in']"] = (1, 1)
+        lay[f"['{stack}']['w_out']"] = (1, 1)
+    lay["['embed']"] = (0, 1)
+    return lay
 
 
 register_family(ModelFamily(
@@ -201,4 +219,5 @@ register_family(ModelFamily(
     decode_state_specs=decode_state_specs,
     decode_step=decode_step,
     prefill=apply,
+    pack_layouts=pack_layouts,
 ))

@@ -15,7 +15,8 @@ import numpy as np
 
 from .api import ModelConfig, ModelFamily, ParamSpec, register_family
 from .layers import (AttnParams, MlpParams, attn_block, causal_conv1d,
-                     decode_attention, qkv_project, rms_norm, swiglu)
+                     decode_attention, embed_lookup, linear, qkv_project,
+                     rms_norm, swiglu)
 
 SSM_HEAD_DIM = 64
 
@@ -158,7 +159,7 @@ def mamba_layer(x, lp, cfg, conv_state=None, ssm_state=None):
     Bsz, T, D = x.shape
     di, H, N = _dims(cfg)
     dt_ = x.dtype
-    zxbcdt = jnp.einsum("btd,de->bte", x, lp["in_proj"].astype(dt_))
+    zxbcdt = linear(x, lp["in_proj"], "btd,de->bte")
     z, xc, Bm, Cm, dt = jnp.split(
         zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
     xbc = jnp.concatenate([xc, Bm, Cm], axis=-1)
@@ -178,7 +179,7 @@ def mamba_layer(x, lp, cfg, conv_state=None, ssm_state=None):
     y = y.reshape(Bsz, T, di)
     # gated RMSNorm (Mamba-2): norm(y) * silu(z)
     y = rms_norm(y, lp["gate_norm"], cfg.norm_eps) * jax.nn.silu(z)
-    out = jnp.einsum("bte,ed->btd", y.astype(dt_), lp["out_proj"].astype(dt_))
+    out = linear(y.astype(dt_), lp["out_proj"], "bte,ed->btd")
     return out, (conv_new, ssm_new)
 
 
@@ -193,7 +194,7 @@ def _shared_attn_block(x, sp, positions, cfg):
 def apply(params, batch, cfg: ModelConfig):
     tokens = batch["tokens"]
     dt_ = jnp.dtype(cfg.dtype)
-    x = jnp.take(params["embed"], tokens, axis=0).astype(dt_)
+    x = embed_lookup(params["embed"], tokens, dtype=dt_)
     positions = jnp.arange(tokens.shape[1])
     shared = params["shared"]
 
@@ -212,7 +213,7 @@ def apply(params, batch, cfg: ModelConfig):
     body_fn = jax.checkpoint(group_body) if cfg.remat == "full" else group_body
     x, _ = jax.lax.scan(body_fn, x, params["mamba"])
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(dt_))
+    logits = linear(x, params["unembed"], "btd,dv->btv")
     return logits.astype(jnp.float32)
 
 
@@ -243,7 +244,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     tokens = batch["tokens"]
     dt_ = jnp.dtype(cfg.dtype)
     pos = state["pos"]
-    x = jnp.take(params["embed"], tokens, axis=0).astype(dt_)
+    x = embed_lookup(params["embed"], tokens, dtype=dt_)
     positions = pos[None] + jnp.zeros((1,), jnp.int32)
     shared = params["shared"]
 
@@ -256,7 +257,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
         vc = jax.lax.dynamic_update_slice_in_dim(
             vc, v_new.astype(vc.dtype), pos, axis=1)
         o = decode_attention(q, kc, vc, pos)
-        x = x + jnp.einsum("btnh,nhd->btd", o, shared["wo"].astype(o.dtype))
+        x = x + linear(o, shared["wo"], "btnh,nhd->btd")
         h = rms_norm(x, shared["mlp_norm"], cfg.norm_eps)
         x = x + swiglu(h, MlpParams(shared["w_gate"], shared["w_up"],
                                     shared["w_down"]))
@@ -281,7 +282,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
         group_body, x, (params["mamba"], state["conv"], state["ssm"],
                         state["k"], state["v"]))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(dt_))
+    logits = linear(x, params["unembed"], "btd,dv->btv")
     new_state = {"conv": conv, "ssm": ssm, "k": k, "v": v, "pos": pos + 1}
     return logits.astype(jnp.float32), new_state
 
@@ -302,6 +303,28 @@ def init(rng, cfg: ModelConfig):
     return params
 
 
+def pack_layouts(cfg: ModelConfig) -> dict:
+    """Packed-serving layouts. Mamba in/out projections carry two lead
+    dims (groups, layers) — the nested scans slice both off before `linear`
+    sees the 2-D codes. The depthwise conv and the per-head SSM vectors
+    (A_log, D_skip, dt_bias) are not matmuls; the shared attention block is
+    un-stacked (0 lead dims)."""
+    lay = {
+        "['mamba']['in_proj']": (2, 1),
+        "['mamba']['out_proj']": (2, 1),
+        "['shared']['wq']": (0, 1),
+        "['shared']['wk']": (0, 1),
+        "['shared']['wv']": (0, 1),
+        "['shared']['wo']": (0, 2),
+        "['shared']['w_gate']": (0, 1),
+        "['shared']['w_up']": (0, 1),
+        "['shared']['w_down']": (0, 1),
+        "['embed']": (0, 1),
+        "['unembed']": (0, 1),
+    }
+    return lay
+
+
 register_family(ModelFamily(
     name="zamba2",
     param_specs=param_specs,
@@ -310,4 +333,5 @@ register_family(ModelFamily(
     decode_state_specs=decode_state_specs,
     decode_step=decode_step,
     prefill=apply,
+    pack_layouts=pack_layouts,
 ))

@@ -2,7 +2,26 @@
 
 The deployment half of the paper's claim: block-scaled codebook formats cut
 the weight stream ~4× at 4 bits, and the serving path realises it by never
-materialising a dense copy of planned tensors.
+materialising a dense copy of planned tensors — for **every** family in the
+zoo, because weight application goes through one projection API.
+
+The unified projection API
+--------------------------
+Every model family applies parameters exclusively through
+``models.layers.linear(x, w, spec)`` (plus ``embed_lookup`` for token
+gathers and ``expert_matmul`` for MoE stacks). The einsum spec documents
+the dense semantics and drives the packed dispatch: when ``w`` is a
+:class:`repro.core.PackedTensor`, a spec whose weight subscripts lead with
+the contracting labels routes through the fused ``dequant_matmul`` kernel,
+and a spec whose weight subscripts *end* with them (``"btd,vd->btv"`` —
+tied embeddings) routes through the transposed ``dequant_matmul_t``
+variant, contracting along the blocked axis so ``unembed = embed.T`` never
+materialises. Dense weights take the exact einsum the call site always
+used. There are no per-family special cases: packed serving is a property
+of the system, declared per tensor in ``ModelFamily.pack_layouts``
+(required — a family that cannot pack registers
+``models.api.empty_pack_layouts`` and ``from_quantised(packed=True)``
+fails fast instead of silently serving dense).
 
 Components
 ----------
@@ -16,28 +35,34 @@ Components
       **two codes per byte** (``bits=4``, the K-dim nibble interleave of
       ``core.nibble``) — the paper's full ~4× resident/stream cut over
       bf16, ~7.5× vs the f32 master — and every matmul routes through the
-      fused ``kernels.ops.dequant_matmul`` (Pallas on TPU with in-VMEM
-      nibble unpack, jnp oracle off-TPU). MoE expert stacks
-      (``we_gate``/``we_up``/``we_down``) stream per expert through the
-      kernel's batched lead dim inside ``moe_block`` instead of being
-      densified. Embedding rows gather-dequantise on the fly (byte row +
-      nibble select for 4-bit tables), honouring the serving dtype.
+      fused ``kernels.ops.dequant_matmul`` / ``dequant_matmul_t`` pair
+      (Pallas on TPU with in-VMEM nibble unpack, jnp oracle off-TPU). MoE
+      expert stacks (``we_gate``/``we_up``/``we_down``) stream per expert
+      through the kernel's batched lead dim inside ``moe_block`` instead
+      of being densified (the EP shard_map path logs once and falls back
+      to local dispatch for packed stacks). Embedding rows
+      gather-dequantise on the fly (byte row + nibble select for 4-bit
+      tables), honouring the serving dtype; tied tables additionally serve
+      the logits matmul transposed.
 
     Families with ``ModelFamily.supports_ragged`` (transformer, internvl)
     decode with **per-slot KV positions** and **batched chunked prefill**:
     slots admit ragged prompt lengths with no lockstep padding; prompts
     stream through ``decode_step`` in ``prefill_chunk``-token chunks while
     decode-phase slots ride along in the same call (one valid token each).
-    Other families (rwkv6, zamba2, whisper) run the legacy lockstep loop.
+    Other families (rwkv6, zamba2, whisper) run the legacy lockstep loop —
+    but all five serve packed.
 
-    ``ServeEngine.weight_bytes()`` reports resident packed vs dense bytes;
-    ``benchmarks/serve_packed.py`` measures tokens/s and weight bytes for
-    both paths (and the MoE packed path) and emits the machine-readable
-    ``BENCH_serve.json`` perf record. Measured on paper-100m-small,
-    babsmax64:n4: resident weight bytes 0.133× of the f32 master (7.5×;
-    ≈ 3.75× over a bf16 copy — scales cost the remaining sliver), greedy
-    tokens identical to the dense path; qwen2-moe smoke 0.161× with expert
-    stacks packed.
+    ``ServeEngine.weight_bytes()`` reports resident bytes broken out as
+    codes / scales / codebooks / dense (comparable across architectures);
+    ``benchmarks/serve_packed.py`` measures tokens/s and weight bytes per
+    family (``--arch`` selects) and emits the machine-readable
+    ``BENCH_serve.json`` perf record with per-family resident ratios.
+    Measured (babsmax64:n4, packed vs the f32 master): paper-100m-small
+    0.133×, tied paper-100m 0.133× (embed packed, no dense unembed),
+    rwkv6 smoke 0.140×, whisper smoke 0.138×, qwen2-moe smoke 0.161× with
+    expert stacks packed — greedy tokens identical to the dense path in
+    every family.
 
 ``context_parallel``
     Flash-decode attention over a sequence-sharded KV cache (exact
@@ -47,8 +72,9 @@ Which tensors pack is declared per family (``ModelFamily.pack_layouts``)
 and checked per format (``QuantisationPlan.packable``): block-scaled
 codebooks of ≤256 codes whose output dim tiles by the scale block; ≤16
 codes with an even contraction dim additionally nibble-pack to 4 bits.
-The rest (the MoE router, tied embeddings, tensor/channel-scaled or
-sparse formats) are dequantised at load — see ROADMAP open items.
+The rest (the MoE router, formats with sparse outliers or tensor/channel
+scaling, tensors whose output dim does not tile by the block — e.g.
+zamba2's 548-wide in_proj in smoke) are dequantised at load.
 """
 from . import context_parallel, engine  # noqa: F401
 from .engine import Request, ServeEngine, greedy_generate

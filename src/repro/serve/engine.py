@@ -80,12 +80,20 @@ class ServeEngine:
         codebooks) + block scales + codebook, carried as
         :class:`PackedTensor` leaves — and serves through the fused
         ``dequant_matmul`` path; MoE expert stacks stream per expert through
-        its batched lead dim. Tensors the family has no matmul layout for
-        (or whose format is not block-scaled ≤8-bit) are dequantised, as is
-        everything when the family declares no layouts at all."""
-        layouts = getattr(get_family(cfg.family), "pack_layouts", None)
-        if packed and layouts is not None:
-            params = plan.pack_quantised(qparams, layouts(cfg))
+        its batched lead dim, and tied embedding tables serve the logits
+        matmul through the transposed variant. Tensors the family declares
+        no matmul layout for (or whose format is not block-scaled ≤8-bit)
+        are dequantised. A family whose ``pack_layouts`` is empty (the
+        explicit cannot-pack declaration) raises immediately rather than
+        silently serving dense — pass ``packed=False`` to opt into that."""
+        if packed:
+            layouts = get_family(cfg.family).pack_layouts(cfg)
+            if not layouts:
+                raise ValueError(
+                    f"family {cfg.family!r} declares an empty pack layout — "
+                    "no tensor can serve packed; pass packed=False to serve "
+                    "dequantised dense weights")
+            params = plan.pack_quantised(qparams, layouts)
         else:
             params = plan.dequantise(qparams)
         return cls(cfg, params, **kw)
@@ -98,15 +106,25 @@ class ServeEngine:
 
     # ------------------------------------------------------------ accounting
     def weight_bytes(self) -> dict:
-        """Resident parameter bytes: packed (codes+scales) vs dense leaves."""
-        packed = dense = 0
+        """Resident parameter bytes, broken out so entries are comparable
+        across architectures: ``codes`` (the quantised weight stream),
+        ``scales`` (block-scale overhead), ``codebooks`` (f32 codepoint
+        tables — tiny but per-tensor), ``packed`` = codes + scales +
+        codebooks, ``dense`` (leaves served in a dense dtype), ``total``,
+        plus the ``family`` tag."""
+        codes = scales = codebooks = dense = 0
         for leaf in jax.tree.leaves(
                 self.params, is_leaf=lambda x: isinstance(x, PackedTensor)):
             if isinstance(leaf, PackedTensor):
-                packed += leaf.nbytes_packed
+                codes += int(leaf.codes.size) * leaf.codes.dtype.itemsize
+                scales += int(leaf.scales.size) * leaf.scales.dtype.itemsize
+                codebooks += 4 * len(leaf.codepoints)
             else:
                 dense += int(leaf.size) * leaf.dtype.itemsize
-        return {"packed": packed, "dense": dense, "total": packed + dense}
+        packed = codes + scales + codebooks
+        return {"packed": packed, "dense": dense, "total": packed + dense,
+                "codes": codes, "scales": scales, "codebooks": codebooks,
+                "family": self.cfg.family}
 
     # ------------------------------------------------------------------- api
     def submit(self, req: Request):

@@ -12,7 +12,10 @@ from repro.kernels.block_quant.block_quant import block_quant as bq_pallas
 from repro.kernels.block_quant.ref import block_quant_ref, block_dequant_ref
 from repro.kernels.dequant_matmul.dequant_matmul import \
     dequant_matmul as dqm_pallas
-from repro.kernels.dequant_matmul.ref import dequant_matmul_ref
+from repro.kernels.dequant_matmul.dequant_matmul import \
+    dequant_matmul_t as dqmt_pallas
+from repro.kernels.dequant_matmul.ref import (dequant_matmul_ref,
+                                              dequant_matmul_t_ref)
 
 CODEBOOKS = {
     "int4": el.int_format(4).np_codepoints(),
@@ -178,6 +181,88 @@ class TestNibblePackedKernel:
         np.testing.assert_allclose(np.asarray(y_b, np.float32),
                                    np.asarray(y_r, np.float32),
                                    rtol=2e-2, atol=2e-1)
+
+
+class TestTransposedDequantMatmul:
+    """The transposed variant (tied-embeddings unembed): y = x @ W.T with W
+    stored codes (V, D) + scales blocked along D — the contraction runs
+    along the blocked axis, and with bits=4 the nibble interleave runs
+    along the *output* (V) axis."""
+
+    @pytest.mark.parametrize("cb_name", ["int4", "t4_absmax", "int8"])
+    @pytest.mark.parametrize("mdv", [(128, 256, 256), (128, 256, 512)])
+    def test_matches_oracle_uint8(self, cb_name, mdv):
+        M, D, V = mdv
+        cb = jnp.asarray(CODEBOOKS[cb_name], jnp.float32)
+        x = rand((M, D), jnp.bfloat16, seed=hash((cb_name, mdv)) % 2**31)
+        w = rand((V, D), seed=31, scale=0.1)
+        codes, scales = block_quant_ref(w, cb)
+        y_k = dqmt_pallas(x, codes, scales, cb, interpret=True)
+        y_r = dequant_matmul_t_ref(x, codes, scales, cb)
+        assert y_k.shape == (M, V)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+    @pytest.mark.parametrize("cb_name", ["int4", "nf4"])
+    def test_matches_oracle_nibble(self, cb_name):
+        M, D, V = 128, 256, 512
+        cb = jnp.asarray(CODEBOOKS[cb_name], jnp.float32)
+        x = rand((M, D), jnp.bfloat16, seed=32)
+        codes, scales = block_quant_ref(rand((V, D), seed=33, scale=0.1), cb)
+        packed = pack_nibbles(codes)       # nibble interleave along V
+        assert packed.shape == (V // 2, D)
+        y_k = dqmt_pallas(x, packed, scales, cb, bits=4, interpret=True)
+        y_r = dequant_matmul_t_ref(x, packed, scales, cb, bits=4)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+    def test_nibble_bit_identical_to_uint8(self):
+        """Both the oracle and the kernel body must be bit-identical across
+        the two storage widths (unpack restores the exact codes)."""
+        M, D, V = 128, 256, 512
+        cb = jnp.asarray(CODEBOOKS["t4_absmax"], jnp.float32)
+        x = rand((M, D), jnp.bfloat16, seed=34)
+        codes, scales = block_quant_ref(rand((V, D), seed=35, scale=0.1), cb)
+        packed = pack_nibbles(codes)
+        np.testing.assert_array_equal(
+            np.asarray(dequant_matmul_t_ref(x, packed, scales, cb, bits=4),
+                       np.float32),
+            np.asarray(dequant_matmul_t_ref(x, codes, scales, cb, bits=8),
+                       np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(dqmt_pallas(x, packed, scales, cb, bits=4,
+                                   interpret=True)),
+            np.asarray(dqmt_pallas(x, codes, scales, cb, bits=8,
+                                   interpret=True)))
+
+    def test_grid_accumulation_over_blocked_axis(self):
+        """D spans multiple tiles: accumulation along the blocked
+        contraction axis must be exact."""
+        M, D, V = 128, 1024, 256   # D/TILE_N = 4 accumulation steps
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((M, D), jnp.bfloat16, seed=36)
+        codes, scales = block_quant_ref(rand((V, D), seed=37, scale=0.1), cb)
+        y_k = dqmt_pallas(x, pack_nibbles(codes), scales, cb, bits=4,
+                          interpret=True)
+        y_r = dequant_matmul_t_ref(x, pack_nibbles(codes), scales, cb, bits=4)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+    def test_transposed_oracle_equals_plain_matmul_of_transpose(self):
+        """dequant_matmul_t_ref(x, W) == x @ dequantise(W).T elementwise."""
+        M, D, V = 64, 256, 256
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((M, D), jnp.float32, seed=38)
+        codes, scales = block_quant_ref(rand((V, D), seed=39, scale=0.1), cb)
+        w = np.asarray(cb)[np.asarray(codes).astype(np.int32)].reshape(
+            V, -1, 128) * np.asarray(scales, np.float32)[..., None]
+        ref = np.asarray(x, np.float32) @ w.reshape(V, D).T
+        got = dequant_matmul_t_ref(x, codes, scales, cb)
+        np.testing.assert_allclose(np.asarray(got, np.float32), ref,
+                                   rtol=2e-5, atol=2e-5)
 
 
 class TestOpsWrapper:

@@ -179,6 +179,148 @@ class TestMoEPackedServing:
         assert a == b
 
 
+class TestUnifiedPackedFamilies:
+    """The unified projection API: rwkv6 / zamba2 / whisper serve packed
+    through `layers.linear` exactly like the transformer — greedy tokens
+    identical to the dequantised-dense engine, with the big projections
+    held as PackedTensors."""
+
+    FAMS = {
+        "rwkv6-1.6b": ("['layers']['wr']", 10),
+        "zamba2-2.7b": ("['mamba']['out_proj']", 8),
+        "whisper-large-v3": ("['dec']['self_wq']", 14),
+    }
+
+    def _engines(self, arch, **kw):
+        cfg = configs.get_config(arch, "smoke").replace(
+            dtype="float32", param_dtype="float32")
+        fam = mapi.get_family(cfg.family)
+        params = fam.init(jax.random.PRNGKey(0), cfg)
+        plan = build_plan(params, "babsmax32:n4")
+        qparams = plan.quantise(params)
+        eng_p = ServeEngine.from_quantised(cfg, qparams, plan, **kw)
+        eng_d = ServeEngine.from_quantised(cfg, qparams, plan, packed=False,
+                                           **kw)
+        return eng_p, eng_d
+
+    @pytest.mark.parametrize("arch", list(FAMS))
+    def test_projections_held_packed(self, arch):
+        from repro.core import PackedTensor
+        from repro.core.plan import path_str
+        probe, n_min = self.FAMS[arch]
+        eng_p, _ = self._engines(arch, batch_slots=1, kv_len=32)
+        flat = jax.tree_util.tree_flatten_with_path(
+            eng_p.params, is_leaf=lambda x: isinstance(x, PackedTensor))[0]
+        leaves = {path_str(p): l for p, l in flat}
+        assert isinstance(leaves[probe], PackedTensor), probe
+        assert leaves[probe].bits == 4
+        n_packed = sum(1 for l in leaves.values()
+                       if isinstance(l, PackedTensor))
+        assert n_packed >= n_min, (arch, n_packed)
+        # the embedding table is always packed (gather + tied-transposed use)
+        assert isinstance(leaves["['embed']"], PackedTensor)
+
+    @pytest.mark.parametrize("arch", list(FAMS))
+    def test_packed_greedy_tokens_identical(self, arch):
+        eng_p, eng_d = self._engines(arch, batch_slots=2, kv_len=32)
+        for eng in (eng_p, eng_d):
+            eng.submit(Request(prompt=[5, 9, 3, 7], max_new_tokens=6, rid=0))
+            eng.submit(Request(prompt=[11, 4], max_new_tokens=6, rid=1))
+        a = {g.rid: g.tokens for g in eng_p.run()}
+        b = {g.rid: g.tokens for g in eng_d.run()}
+        assert set(a) == {0, 1} and a == b
+
+
+class TestTiedEmbeddingServing:
+    """tie_embeddings: the packed (V, D) embed table serves BOTH the token
+    gather and the logits matmul (transposed kernel variant) — no dense
+    unembed is ever materialised."""
+
+    TCFG = CFG.replace(tie_embeddings=True)
+
+    def _engines(self, **kw):
+        fam = mapi.get_family(self.TCFG.family)
+        params = fam.init(jax.random.PRNGKey(0), self.TCFG)
+        assert "unembed" not in params   # tied: no separate table exists
+        plan = build_plan(params, "babsmax32:n4")
+        qparams = plan.quantise(params)
+        eng_p = ServeEngine.from_quantised(self.TCFG, qparams, plan, **kw)
+        eng_d = ServeEngine.from_quantised(self.TCFG, qparams, plan,
+                                           packed=False, **kw)
+        return eng_p, eng_d
+
+    def test_embed_packed_no_dense_unembed(self):
+        from repro.core import PackedTensor
+        eng_p, _ = self._engines(batch_slots=1, kv_len=32)
+        emb = eng_p.params["embed"]
+        assert isinstance(emb, PackedTensor) and emb.bits == 4
+        assert "unembed" not in eng_p.params
+        # nothing vocab-sized is resident dense: only norms remain unpacked
+        for leaf in jax.tree.leaves(
+                eng_p.params, is_leaf=lambda x: isinstance(x, PackedTensor)):
+            if not isinstance(leaf, PackedTensor):
+                assert self.TCFG.vocab not in leaf.shape, leaf.shape
+
+    def test_tied_packed_greedy_tokens_identical(self):
+        eng_p, eng_d = self._engines(batch_slots=2, kv_len=32,
+                                     prefill_chunk=4)
+        for eng in (eng_p, eng_d):
+            eng.submit(Request(prompt=[5, 9, 3, 7, 2], max_new_tokens=6,
+                               rid=0))
+            eng.submit(Request(prompt=[11, 4], max_new_tokens=6, rid=1))
+        a = {g.rid: g.tokens for g in eng_p.run()}
+        b = {g.rid: g.tokens for g in eng_d.run()}
+        assert a == b
+
+    def test_tied_decode_matches_apply_argmax(self):
+        """Tied decode path (transposed linear) against the forward pass."""
+        fam = mapi.get_family(self.TCFG.family)
+        params = fam.init(jax.random.PRNGKey(1), self.TCFG)
+        prompt = np.asarray([[5, 9, 3, 7]], np.int32)
+        gen = greedy_generate(self.TCFG, params, prompt, n_new=3, kv_len=16)
+        toks = prompt.copy()
+        for _ in range(3):
+            logits = fam.apply(params, {"tokens": jnp.asarray(toks)},
+                               self.TCFG)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))[:, None]
+            toks = np.concatenate([toks, nxt], 1)
+        np.testing.assert_array_equal(gen, toks[:, prompt.shape[1]:])
+
+
+class TestEmptyPackLayoutFailFast:
+    def test_packed_engine_refuses_empty_layout_family(self):
+        """A family declaring empty_pack_layouts must fail fast on
+        packed=True (never silently serve dense)."""
+        from repro.models.api import (ModelFamily, empty_pack_layouts,
+                                      register_family, _FAMILIES)
+        fam = mapi.get_family(CFG.family)
+        stub = ModelFamily(
+            name="_nopack_stub", param_specs=fam.param_specs, init=fam.init,
+            apply=fam.apply, decode_state_specs=fam.decode_state_specs,
+            decode_step=fam.decode_step, prefill=fam.prefill,
+            pack_layouts=empty_pack_layouts)
+        register_family(stub)
+        try:
+            cfg = CFG.replace(family="_nopack_stub")
+            params = _params()
+            plan = build_plan(params, "babsmax32:n4")
+            with pytest.raises(ValueError, match="_nopack_stub"):
+                ServeEngine.from_quantised(cfg, plan.quantise(params), plan,
+                                           batch_slots=1, kv_len=32)
+            # the explicit opt-out still works
+            eng = ServeEngine.from_quantised(cfg, plan.quantise(params), plan,
+                                             packed=False, batch_slots=1,
+                                             kv_len=32)
+            assert eng.weight_bytes()["packed"] == 0
+        finally:
+            _FAMILIES.pop("_nopack_stub", None)
+
+    def test_pack_layouts_required_at_registration(self):
+        from repro.models.api import ModelFamily
+        with pytest.raises(ValueError, match="pack_layouts"):
+            ModelFamily(name="_bad", param_specs=None, init=None, apply=None)
+
+
 class TestRaggedSlots:
     """Per-slot KV positions: slots with different prompt lengths decode
     correctly in one batch, each matching its single-sequence reference."""
