@@ -10,6 +10,10 @@
 #                                   the transposed tied-embeddings variant
 #                                   dequant_matmul_t) against the jnp
 #                                   oracles
+#   scripts/run_tests.sh --serve    serving tests only (engine, packed
+#                                   serving, ragged slot reuse / reset,
+#                                   chunked prefill) — fast iteration on
+#                                   the continuous-batching path
 #   scripts/run_tests.sh [pytest args...]   extra args forwarded to pytest
 #
 # Works offline: tests/conftest.py shims `hypothesis` when it is missing.
@@ -24,5 +28,9 @@ fi
 if [ "${1:-}" = "--kernels" ]; then
     shift
     exec python -m pytest -q tests/test_kernels.py "$@"
+fi
+if [ "${1:-}" = "--serve" ]; then
+    shift
+    exec python -m pytest -q tests/test_serve.py tests/test_serve_ragged.py "$@"
 fi
 exec python -m pytest -q -m "not slow" "$@"

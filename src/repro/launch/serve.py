@@ -31,11 +31,19 @@ def main(argv=None):
                          "per byte for ≤16-point codebooks — + block scales) "
                          "and serve through dequant_matmul instead of "
                          "materialising dense fake-quant weights")
-    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="batched chunked-prefill width (every family runs "
+                         "the ragged path: per-slot positions + in-step "
+                         "slot reset; rwkv6/zamba2 stream prompt chunks "
+                         "through their block-parallel wkv/ssd forms)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--kv-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--relaxed-admission", action="store_true",
+                    help="admit requests whose prompt + max_new exceeds "
+                         "--kv-len and flag the truncated generations, "
+                         "instead of rejecting them at submit")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch, args.variant)
@@ -56,7 +64,8 @@ def main(argv=None):
             # declares an empty pack layout
             eng = ServeEngine.from_quantised(
                 cfg, plan.quantise(params), plan, batch_slots=args.slots,
-                kv_len=args.kv_len, prefill_chunk=args.prefill_chunk)
+                kv_len=args.kv_len, prefill_chunk=args.prefill_chunk,
+                strict_admission=not args.relaxed_admission)
             wb = eng.weight_bytes()
             if wb["packed"] == 0:
                 # the family has layouts but the format rejected every
@@ -80,7 +89,8 @@ def main(argv=None):
     if eng is None:
         eng = ServeEngine(cfg, params, batch_slots=args.slots,
                           kv_len=args.kv_len,
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk,
+                          strict_admission=not args.relaxed_admission)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=4).tolist()
@@ -90,8 +100,10 @@ def main(argv=None):
     done = eng.run()
     dt = time.time() - t0
     n_tok = sum(len(g.tokens) for g in done)
+    n_trunc = sum(g.truncated for g in done)
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / max(dt, 1e-9):.1f} tok/s)")
+          f"({n_tok / max(dt, 1e-9):.1f} tok/s)"
+          + (f", {n_trunc} truncated at the KV budget" if n_trunc else ""))
     for g in done[:4]:
         print(f"  rid={g.rid} tokens={g.tokens}")
     return done

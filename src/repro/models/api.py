@@ -161,12 +161,30 @@ class ModelFamily:
     decode_step: Callable = None    # (params, state, batch, cfg) -> (logits, state)
     prefill: Callable = None        # (params, batch, cfg) -> (logits, state)
     # --- serving capabilities -------------------------------------------------
-    # supports_ragged: decode_step takes (B, T) token chunks with per-slot
-    # positions (state["pos"]: (B,) int32) and an optional batch["t_valid"]
-    # (B,) advance count — enables continuous batching without lockstep
-    # padding and batched chunked prefill in serve.engine. Families without
-    # it are driven on the legacy lockstep path.
+    # supports_ragged: the ragged serving protocol, REQUIRED for ServeEngine
+    # (the legacy lockstep loop is gone — every family decodes through the
+    # one continuous-batching path). decode_step takes (B, T) token chunks
+    # with per-slot positions (state["pos"]: (B,) int32) plus two optional
+    # batch entries:
+    #   * "t_valid" (B,) int32 — how many leading tokens of each row are
+    #     real; the row's state (KV position, recurrent/conv/ssm state,
+    #     token-shift buffers) advances by exactly that count and padding
+    #     is masked out of every state update;
+    #   * "reset" (B,) bool — zero that slot's per-request state (KV rows,
+    #     recurrent state) and position inside the jitted step before any
+    #     token is processed. The engine raises it on the first step after
+    #     a slot is reused, so no request ever observes its predecessor's
+    #     state and no host round-trip is needed.
+    # T=1 is plain decode; T>1 is batched chunked prefill (recurrent
+    # families route it through their block-parallel wkv/ssd forms).
     supports_ragged: bool = False
+    # cross_prefill: optional — (params, frames (1, enc_seq, D) | None, cfg)
+    # -> dict of per-slot decode-state entries (batch dim 1, e.g. whisper's
+    # cross-attention xk/xv). The engine computes it per ADMITTED slot and
+    # scatters the result into that slot's state rows; None frames must
+    # return zeroed entries (text-only request / stale-slot wipe). These
+    # entries are owned by admission, not by the in-step "reset" mask.
+    cross_prefill: Callable = None
     # pack_layouts: required — see the class docstring. Declared last for
     # dataclass field ordering; validated at registration.
     pack_layouts: Callable = None
@@ -177,6 +195,41 @@ class ModelFamily:
                 f"ModelFamily {self.name!r}: pack_layouts is required — "
                 "declare the packed-serving matmul layouts, or register "
                 "models.api.empty_pack_layouts for a family with none")
+
+
+def ragged_prologue(state, batch, reset_axes):
+    """The shared prologue of the ragged serving protocol (one source of
+    truth for all four decode_steps — see the ``supports_ragged`` notes on
+    :class:`ModelFamily`): read the per-slot positions, default the advance
+    counts from ``t_valid``, and honour the per-slot ``reset`` mask by
+    zeroing the named per-request state entries (and pos) inside the jitted
+    step. ``reset_axes`` maps each resettable state key to the index of its
+    batch dim (families stack state differently: transformer/whisper KV is
+    (L, B, S, ...), zamba2's conv/ssm are (G, P, B, ...)).
+
+    Returns ``(pos, adv, valid, entries)``: ``entries`` holds the
+    possibly-wiped arrays for exactly the ``reset_axes`` keys; ``valid`` is
+    the (B, T) ragged-chunk mask (True where a row's token is real), or
+    None for a plain T=1 call with no ``t_valid`` — the single-token fast
+    path needs no masking."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    pos = state["pos"]                                     # (B,)
+    t_valid = batch.get("t_valid")
+    adv = jnp.full((B,), T, jnp.int32) if t_valid is None else t_valid
+    entries = {k: state[k] for k in reset_axes}
+    reset = batch.get("reset")
+    if reset is not None:
+        rm = reset.astype(bool)
+        for key, ax in reset_axes.items():
+            a = entries[key]
+            shape = [1] * a.ndim
+            shape[ax] = a.shape[ax]
+            entries[key] = jnp.where(rm.reshape(shape), 0, a)
+        pos = jnp.where(rm, 0, pos)
+    valid = (jnp.arange(T, dtype=jnp.int32)[None, :] < adv[:, None]
+             if (T > 1 or t_valid is not None) else None)
+    return pos, adv, valid, entries
 
 
 def register_family(fam: ModelFamily):

@@ -67,8 +67,8 @@ register_family(ModelFamily(
     decode_step=decode_step,
     prefill=apply,
     # shares the transformer decode path: per-slot positions + chunked
-    # prefill + packed backbone weights (the vis projector stays dense —
-    # it only runs in prefill's apply())
+    # prefill + the in-step reset mask + packed backbone weights (the vis
+    # projector stays dense — it only runs in prefill's apply())
     supports_ragged=True,
     pack_layouts=transformer.pack_layouts,
 ))

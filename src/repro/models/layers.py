@@ -593,15 +593,26 @@ def router_load_balancing_loss(probs, choice, E):
     return E * jnp.sum(f * pbar)
 
 
-def causal_conv1d(x, w, state=None):
+def causal_conv1d(x, w, state=None, n_valid=None):
     """Depthwise causal conv over time. x: (B, T, C); w: (Kw, C).
     With ``state`` ((B, Kw-1, C)) performs streaming decode; returns
-    (y, new_state)."""
+    (y, new_state). ``n_valid`` ((B,) int32) marks how many leading tokens
+    of each row are real (ragged chunks): the new state is then the Kw-1
+    inputs preceding each row's valid prefix end, so padding tokens never
+    enter the streaming state (a row with n_valid=0 keeps its state)."""
     Kw = w.shape[0]
     if state is None:
         xp = jnp.pad(x, ((0, 0), (Kw - 1, 0), (0, 0)))
     else:
         xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
     y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(Kw))
-    new_state = xp[:, -(Kw - 1):, :] if Kw > 1 else None
+    if Kw <= 1:
+        new_state = None
+    elif n_valid is None:
+        new_state = xp[:, -(Kw - 1):, :]
+    else:
+        # row b's state = xp[b, n_valid[b] : n_valid[b] + Kw-1]
+        new_state = jax.vmap(
+            lambda xr, p: jax.lax.dynamic_slice_in_dim(xr, p, Kw - 1,
+                                                       axis=0))(xp, n_valid)
     return y.astype(x.dtype), new_state

@@ -14,7 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .api import ModelConfig, ModelFamily, ParamSpec, register_family
+from .api import (ModelConfig, ModelFamily, ParamSpec, ragged_prologue,
+                  register_family)
 from .layers import embed_lookup, linear, rms_norm
 
 LORA_R = 64
@@ -105,7 +106,14 @@ def wkv_scan(r, k, v, w, u, s0=None):
     return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_fin
 
 
-_LOG_CLAMP = -20.0  # per-chunk cumulative log-decay floor (numerics)
+_LOG_CLAMP = -20.0   # per-STEP log-decay floor (numerics; exp(-20)≈2e-9 —
+                     # below f32 visibility of the O(1) state update)
+_CUM_CLAMP = -80.0   # per-chunk CUMULATIVE floor: exp(±80) stays finite in
+                     # f32; deep enough that a ≤4-step chunk (the serving
+                     # prefill path) never hits it, so the pairwise decay
+                     # factors exp(cw_t - cw_s) are undistorted — a -20
+                     # cumulative floor made saturated fast-decay channels
+                     # collapse to decay 1 between floored positions
 
 
 def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 32):
@@ -117,8 +125,9 @@ def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 32):
         S ← (W_C)⊙S_prev + Σ_s (k_s·W_C/W_s) v_sᵀ
     so the recurrent state is touched once per CHUNK (O(T/C) HBM traffic
     instead of O(T)), and all inner work is (C×C)/(C×hd) matmuls for the
-    MXU. Exactly equal to wkv_scan (tested); decays are clamped in log
-    space at -20 per chunk for f32 safety.
+    MXU. Matches wkv_scan (tested); decays are floored in log space at -20
+    per step and -80 cumulative per chunk for f32 safety (exact for chunks
+    of ≤4 steps — the serving prefill path).
     """
     B, T, H, hd = r.shape
     assert T % chunk == 0, (T, chunk)
@@ -136,7 +145,7 @@ def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 32):
 
     # cumulative within chunk: cw_t = Σ_{s<=t} log w_s  (inclusive)
     cw = jnp.cumsum(logw, axis=2)
-    cw = jnp.maximum(cw, _LOG_CLAMP)
+    cw = jnp.maximum(cw, _CUM_CLAMP)
     w_tot = jnp.exp(cw[:, :, -1])                    # (B,n,H,hd)
     # decay applied to incoming state at step t: Π_{s<t} w_s = cw_{t-1}
     cw_excl = jnp.concatenate(
@@ -170,8 +179,22 @@ def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 32):
     return y.reshape(B, T, H, hd).astype(r.dtype), s_fin
 
 
-def time_mix(x, lp, cfg, last_x=None, s0=None):
-    """Returns (out, (new_last_x, new_state))."""
+def _last_valid(x, valid, last_x):
+    """Token-shift state after a ragged chunk: row b's input at its last
+    valid position (``valid``: (B, T) bool); rows with no valid token keep
+    ``last_x``. x: (B, T, D)."""
+    B, T, _ = x.shape
+    li = jnp.clip(valid.sum(1) - 1, 0, T - 1)
+    nl = jnp.take_along_axis(x, li[:, None, None], axis=1)[:, 0]
+    keep = valid.any(1)[:, None]
+    return nl if last_x is None else jnp.where(keep, nl, last_x)
+
+
+def time_mix(x, lp, cfg, last_x=None, s0=None, valid=None):
+    """Returns (out, (new_last_x, new_state)). ``valid`` ((B, T) bool) masks
+    ragged-chunk padding out of the recurrent state: invalid steps get
+    k=0 / w=1 (the WKV identity update), and the token-shift state advances
+    to each row's last *valid* input."""
     B, T, D = x.shape
     H, hd = _n_heads(cfg), HEAD_DIM
     dt = x.dtype
@@ -190,19 +213,35 @@ def time_mix(x, lp, cfg, last_x=None, s0=None):
                     lp["w_lora_b"], "btr,rd->btd")
     w = jnp.exp(-jnp.exp((lp["w0"].astype(jnp.float32) +
                           w_lora.astype(jnp.float32))))
+    if valid is not None:
+        vm = valid[..., None]
+        k = jnp.where(vm, k, 0.0).astype(k.dtype)   # kv outer product -> 0
+        w = jnp.where(vm, w, 1.0)                   # decay 1: S untouched
     hsplit = lambda a: a.reshape(B, T, H, hd)
     ck = cfg.linear_chunk
-    use_chunked = (s0 is None and ck and T > ck and T % ck == 0)
-    wkv = (lambda *a: wkv_chunked(*a, chunk=ck)) if use_chunked else wkv_scan
+    if s0 is None:
+        use_chunked = bool(ck and T > ck and T % ck == 0)
+        chunk = ck
+    else:
+        # streaming (serving): multi-token chunks run the block-parallel
+        # form seeded with the carried state — batched chunked prefill.
+        # Inner chunk ≤ 4 so the cumulative log-decay (≥ -20/step) never
+        # reaches the -80 floor: pairwise decays stay undistorted and
+        # greedy tokens match the token-by-token scan.
+        chunk = next((c for c in (4, 3, 2) if T % c == 0), 1)
+        use_chunked = T > 1 and chunk > 1
+    wkv = (lambda *a: wkv_chunked(*a, chunk=chunk)) if use_chunked \
+        else wkv_scan
     y, s_fin = wkv(hsplit(r), hsplit(k), hsplit(v),
                    hsplit(w.astype(dt)), lp["bonus_u"], s0)
     y = _group_norm(y, lp["ln_x"], cfg.norm_eps)
     y = y * jax.nn.silu(g)
     out = linear(y.astype(dt), lp["wo"], "btd,de->bte")
-    return out, (x[:, -1], s_fin)
+    new_last = x[:, -1] if valid is None else _last_valid(x, valid, last_x)
+    return out, (new_last, s_fin)
 
 
-def channel_mix(x, lp, cfg, last_x=None):
+def channel_mix(x, lp, cfg, last_x=None, valid=None):
     dt = x.dtype
     xs = _shift(x, last_x)
     xk = x + (xs - x) * lp["mu_ck"].astype(dt)
@@ -210,7 +249,8 @@ def channel_mix(x, lp, cfg, last_x=None):
     r = jax.nn.sigmoid(linear(xr, lp["wcr"], "btd,de->bte"))
     k = jnp.square(jax.nn.relu(linear(xk, lp["wck"], "btd,df->btf")))
     out = r * linear(k, lp["wcv"], "btf,fd->btd")
-    return out, x[:, -1]
+    new_last = x[:, -1] if valid is None else _last_valid(x, valid, last_x)
+    return out, new_last
 
 
 def apply(params, batch, cfg: ModelConfig):
@@ -237,7 +277,8 @@ def apply(params, batch, cfg: ModelConfig):
 
 def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
     """Recurrent state: O(1) in sequence length (kv_len unused — that is the
-    point of an SSM for the long_500k cell)."""
+    point of an SSM for the long_500k cell). ``pos`` is per-slot ((B,)
+    int32): the ragged serving protocol (see ``ModelFamily``)."""
     D, L = cfg.d_model, cfg.n_layers
     H, hd = _n_heads(cfg), HEAD_DIM
     cd = cfg.dtype
@@ -246,33 +287,43 @@ def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
         "cm_x": ParamSpec((L, batch_size, D), ("layers", "batch", None), cd),
         "wkv": ParamSpec((L, batch_size, H, hd, hd),
                          ("layers", "batch", "heads", None, None), "float32"),
-        "pos": ParamSpec((), (), "int32"),
+        "pos": ParamSpec((batch_size,), ("batch",), "int32"),
     }
 
 
 def decode_step(params, state, batch, cfg: ModelConfig):
-    tokens = batch["tokens"]  # (B, 1)
+    """Ragged decode step. batch: {"tokens": (B, T), "t_valid": optional
+    (B,) advance counts, "reset": optional (B,) mask}. T=1 is plain decode;
+    T>1 is batched chunked prefill through ``wkv_chunked``. Row b's
+    recurrent state advances by exactly ``t_valid[b]`` tokens — padding
+    beyond it is masked out of the WKV and token-shift updates. A set
+    ``reset`` bit zeroes that slot's state (shift buffers + WKV matrix)
+    before any token is processed, so a reused serving slot never sees the
+    previous request's state."""
+    tokens = batch["tokens"]  # (B, T)
     dt = jnp.dtype(cfg.dtype)
+    pos, adv, valid, st = ragged_prologue(
+        state, batch, {"tm_x": 1, "cm_x": 1, "wkv": 1})
+    tm_x, cm_x, wkv_s = st["tm_x"], st["cm_x"], st["wkv"]
     x = embed_lookup(params["embed"], tokens, dtype=dt)
 
     def body(x, inputs):
-        lp, tm_x, cm_x, s = inputs
+        lp, tm, cm, s = inputs
         h, (tm_new, s_new) = time_mix(
             rms_norm(x, lp["norm_tm"], cfg.norm_eps), lp, cfg,
-            last_x=tm_x.astype(dt), s0=s)
+            last_x=tm.astype(dt), s0=s, valid=valid)
         x = x + h
         h, cm_new = channel_mix(
             rms_norm(x, lp["norm_cm"], cfg.norm_eps), lp, cfg,
-            last_x=cm_x.astype(dt))
-        return x + h, (tm_new.astype(tm_x.dtype), cm_new.astype(cm_x.dtype),
+            last_x=cm.astype(dt), valid=valid)
+        return x + h, (tm_new.astype(tm.dtype), cm_new.astype(cm.dtype),
                        s_new)
 
     x, (tm, cm, wkv) = jax.lax.scan(
-        body, x, (params["layers"], state["tm_x"], state["cm_x"],
-                  state["wkv"]))
+        body, x, (params["layers"], tm_x, cm_x, wkv_s))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = linear(x, params["unembed"], "btd,dv->btv")
-    new_state = {"tm_x": tm, "cm_x": cm, "wkv": wkv, "pos": state["pos"] + 1}
+    new_state = {"tm_x": tm, "cm_x": cm, "wkv": wkv, "pos": pos + adv}
     return logits.astype(jnp.float32), new_state
 
 
@@ -310,5 +361,6 @@ register_family(ModelFamily(
     decode_state_specs=decode_state_specs,
     decode_step=decode_step,
     prefill=apply,
+    supports_ragged=True,
     pack_layouts=pack_layouts,
 ))

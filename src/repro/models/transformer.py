@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .api import ModelConfig, ModelFamily, ParamSpec, register_family
+from .api import (ModelConfig, ModelFamily, ParamSpec, ragged_prologue,
+                  register_family)
 from .layers import (AttnParams, MlpParams, MoeParams, attn_block,
                      chunked_decode_attention, embed_lookup, flash_attention,
                      linear, moe_block, qkv_project, rms_norm, swiglu,
@@ -177,15 +178,18 @@ def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
 def decode_step(params, state, batch, cfg: ModelConfig):
     """Chunked decode step with per-slot positions.
 
-    batch: {"tokens": (B, T), "t_valid": optional (B,) int32}. T=1 is plain
-    decode; T>1 is (batched) chunked prefill. Each row writes its T new k/v
-    at its own ``state["pos"][b]`` and advances by ``t_valid[b]`` (default
-    T). Rows whose chunk is partly padding (ragged prompts, or decode rows
-    riding in a prefill-sized call) advance by their valid count; the k/v
-    written beyond it land at positions ≥ the row's new pos, which are
-    always rewritten before they become visible to attention (write-before-
-    read), so padding is harmless. Returns (logits (B, T, V), state); row
-    b's next-token logits live at index t_valid[b]-1.
+    batch: {"tokens": (B, T), "t_valid": optional (B,) int32, "reset":
+    optional (B,) mask}. T=1 is plain decode; T>1 is (batched) chunked
+    prefill. Each row writes its T new k/v at its own ``state["pos"][b]``
+    and advances by ``t_valid[b]`` (default T). Rows whose chunk is partly
+    padding (ragged prompts, or decode rows riding in a prefill-sized call)
+    advance by their valid count; the k/v written beyond it land at
+    positions ≥ the row's new pos, which are always rewritten before they
+    become visible to attention (write-before-read), so padding is
+    harmless. A set ``reset`` bit zeroes that slot's KV rows and position
+    inside the step (slot reuse — see the ``supports_ragged`` protocol in
+    ``models.api``). Returns (logits (B, T, V), state); row b's next-token
+    logits live at index t_valid[b]-1.
 
     Uniform-cache models run the layer scan directly over the stacked cache;
     weights may be PackedTensors (serving from packed quantised weights) —
@@ -193,9 +197,8 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     tokens = batch["tokens"]
     B, T = tokens.shape
     dt = jnp.dtype(cfg.dtype)
-    pos = state["pos"]                                     # (B,)
-    t_valid = batch.get("t_valid")
-    adv = jnp.full((B,), T, jnp.int32) if t_valid is None else t_valid
+    pos, adv, _, st = ragged_prologue(state, batch, {"k": 1, "v": 1})
+    k_s, v_s = st["k"], st["v"]
     x = embed_lookup(params["embed"], tokens, dtype=dt)
     positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
 
@@ -226,7 +229,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
         return x, (kc, vc)
 
     x, (k_new, v_new) = jax.lax.scan(
-        body, x, (params["layers"], state["k"], state["v"], windows))
+        body, x, (params["layers"], k_s, v_s, windows))
     new_state = {"k": k_new, "v": v_new, "pos": pos + adv}
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)

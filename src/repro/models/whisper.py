@@ -12,9 +12,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .api import ModelConfig, ModelFamily, ParamSpec, register_family
-from .layers import (AttnParams, decode_attention, embed_lookup,
-                     flash_attention, gelu_mlp, linear, qkv_project)
+from .api import (ModelConfig, ModelFamily, ParamSpec, ragged_prologue,
+                  register_family)
+from .layers import (AttnParams, chunked_decode_attention, embed_lookup,
+                     flash_attention, gelu_mlp, linear, qkv_project,
+                     update_kv_cache)
 
 
 def layer_norm(x, gain, eps: float = 1e-5):
@@ -143,21 +145,35 @@ def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
                        ("layers", "batch", "seq_kv", "heads", None), cd),
         "v": ParamSpec((Ld, batch_size, kv_len, H, hd),
                        ("layers", "batch", "seq_kv", "heads", None), cd),
-        # cross-attention KV, precomputed from the encoder at prefill
+        # cross-attention KV, written per slot at admission (cross_prefill)
         "xk": ParamSpec((Ld, batch_size, cfg.enc_seq, H, hd),
                         ("layers", "batch", None, "heads", None), cd),
         "xv": ParamSpec((Ld, batch_size, cfg.enc_seq, H, hd),
                         ("layers", "batch", None, "heads", None), cd),
-        "pos": ParamSpec((), (), "int32"),
+        "pos": ParamSpec((batch_size,), ("batch",), "int32"),
     }
 
 
 def decode_step(params, state, batch, cfg: ModelConfig):
-    tokens = batch["tokens"]  # (B, 1)
+    """Ragged decode step. batch: {"tokens": (B, T), "t_valid": optional
+    (B,) advance counts, "reset": optional (B,) mask}. Each row writes its
+    new self-attention k/v at its own ``pos[b]`` and advances by
+    ``t_valid[b]`` (T>1 = batched chunked prefill; padding rows land past
+    the row's new pos and are rewritten before they become visible).
+    ``reset`` zeroes a slot's self-attention KV rows and position inside
+    the step; the cross-attention KV (``xk``/``xv``) is owned by
+    ``cross_prefill``, which overwrites the slot at admission — reset
+    leaves it alone so a just-prefilled slot is not clobbered."""
+    tokens = batch["tokens"]  # (B, T)
+    B, T = tokens.shape
     dt = jnp.dtype(cfg.dtype)
-    pos = state["pos"]
+    # cross KV (xk/xv) is deliberately NOT in the reset set — see docstring
+    pos, adv, _, st = ragged_prologue(state, batch, {"k": 1, "v": 1})
+    k_s, v_s = st["k"], st["v"]
     x = embed_lookup(params["embed"], tokens, dtype=dt)
-    positions = pos[None] + jnp.zeros((1,), jnp.int32)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
+    # the whole encoder output is visible to every decoder position
+    enc_vis = jnp.full((B, T), jnp.int32(2**30))
 
     def body(x, inputs):
         lp, kc, vc, xk, xv = inputs
@@ -165,28 +181,53 @@ def decode_step(params, state, batch, cfg: ModelConfig):
                         lp["self_wo"])
         h = layer_norm(x, lp["self_norm"], cfg.norm_eps)
         q, k_new, v_new = qkv_project(h, ap, positions, cfg, rope_on=True)
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype),
-                                                 pos, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype),
-                                                 pos, axis=1)
-        o = decode_attention(q, kc, vc, pos)
+        kc = update_kv_cache(kc, k_new, pos)
+        vc = update_kv_cache(vc, v_new, pos)
+        o = chunked_decode_attention(q, kc, vc, positions)
         x = x + linear(o, ap.wo, "btnh,nhd->btd")
         cp = AttnParams(lp["cross_wq"], lp["cross_wk"], lp["cross_wv"],
                         lp["cross_wo"])
         h = layer_norm(x, lp["cross_norm"], cfg.norm_eps)
         qc = linear(h, cp.wq, "btd,dnh->btnh")
-        oc = decode_attention(qc, xk, xv, jnp.int32(2**30))  # all enc visible
+        oc = chunked_decode_attention(qc, xk, xv, enc_vis)
         x = x + linear(oc, cp.wo, "btnh,nhd->btd")
         h = layer_norm(x, lp["mlp_norm"], cfg.norm_eps)
         x = x + gelu_mlp(h, lp["w_in"], lp["w_out"])
         return x, (kc, vc)
 
-    x, (k, v) = jax.lax.scan(body, x, (params["dec"], state["k"], state["v"],
+    x, (k, v) = jax.lax.scan(body, x, (params["dec"], k_s, v_s,
                                        state["xk"], state["xv"]))
     x = layer_norm(x, params["dec_norm"], cfg.norm_eps)
     logits = linear(x, params["embed"], "btd,vd->btv")  # tied, transposed
-    new_state = dict(state, k=k, v=v, pos=pos + 1)
+    new_state = dict(state, k=k, v=v, pos=pos + adv)
     return logits.astype(jnp.float32), new_state
+
+
+def cross_prefill(params, frames, cfg: ModelConfig):
+    """Per-slot cross-attention prefill: encode one request's frames
+    ((1, enc_seq, D)) and project them through every decoder layer's cross
+    wk/wv — the state entries the engine scatters into the admitted slot
+    (previously xk/xv were computed engine-globally, so every slot shared
+    one encoding for the engine's lifetime). ``frames=None`` returns zeroed
+    entries (a text-only request; also what wipes a reused slot's stale
+    cross KV). Packed decoder weights serve this through the same unified
+    ``linear`` — the scan slices the packed per-layer codes."""
+    H, hd, Ld = cfg.n_heads, cfg.hd, cfg.n_layers
+    cd = jnp.dtype(cfg.kv_dtype or cfg.dtype)
+    if frames is None:
+        z = jnp.zeros((Ld, 1, cfg.enc_seq, H, hd), cd)
+        return {"xk": z, "xv": z}
+    enc_out = encode(params, frames, cfg)          # (1, enc_seq, D)
+
+    def body(_, lp):
+        kc = linear(enc_out, lp["wk"], "btd,dnh->btnh")
+        vc = linear(enc_out, lp["wv"], "btd,dnh->btnh")
+        return None, (kc.astype(cd), vc.astype(cd))
+
+    _, (xk, xv) = jax.lax.scan(
+        body, None, {"wk": params["dec"]["cross_wk"],
+                     "wv": params["dec"]["cross_wv"]})
+    return {"xk": xk, "xv": xv}
 
 
 def init(rng, cfg: ModelConfig):
@@ -219,5 +260,7 @@ register_family(ModelFamily(
     decode_state_specs=decode_state_specs,
     decode_step=decode_step,
     prefill=apply,
+    supports_ragged=True,
+    cross_prefill=cross_prefill,
     pack_layouts=pack_layouts,
 ))

@@ -13,10 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .api import ModelConfig, ModelFamily, ParamSpec, register_family
+from .api import (ModelConfig, ModelFamily, ParamSpec, ragged_prologue,
+                  register_family)
 from .layers import (AttnParams, MlpParams, attn_block, causal_conv1d,
-                     decode_attention, embed_lookup, linear, qkv_project,
-                     rms_norm, swiglu)
+                     chunked_decode_attention, embed_lookup, linear,
+                     qkv_project, rms_norm, swiglu, update_kv_cache)
 
 SSM_HEAD_DIM = 64
 
@@ -109,8 +110,12 @@ def ssd_scan(x, dt, a, Bm, Cm, h0=None):
 def ssd_chunked(x, dt, a, Bm, Cm, h0=None, chunk: int = 32):
     """Block-parallel SSD (Mamba-2's matmul form). x: (B,T,H,hd);
     dt,a: (B,T,H); Bm,Cm: (B,T,N). State is touched once per chunk; all
-    inner work is (C×C)/(C×N) matmuls. Exactly equals ssd_scan (tested;
-    log-decays clamped at -20/chunk for f32)."""
+    inner work is (C×C)/(C×N) matmuls. Matches ssd_scan (tested;
+    log-decays floored at -20 per step — exp(-20)≈2e-9, below f32
+    visibility of the O(1) state update — and -80 cumulative per chunk:
+    exp(±80) is f32-safe, and a ≤4-step chunk (the serving prefill path)
+    can never reach the floor, so the pairwise factors exp(ca_t - ca_s)
+    are undistorted)."""
     B, T, H, hd = x.shape
     N = Bm.shape[-1]
     assert T % chunk == 0
@@ -121,8 +126,9 @@ def ssd_chunked(x, dt, a, Bm, Cm, h0=None, chunk: int = 32):
     dtc = dt.astype(f32).reshape(B, n, C, H)
     Bc = Bm.astype(f32).reshape(B, n, C, N)
     Cc = Cm.astype(f32).reshape(B, n, C, N)
-    la = jnp.log(jnp.maximum(a.astype(f32), 1e-38)).reshape(B, n, C, H)
-    ca = jnp.maximum(jnp.cumsum(la, axis=2), -20.0)      # inclusive
+    la = jnp.clip(jnp.log(jnp.maximum(a.astype(f32), 1e-38)),
+                  -20.0, 0.0).reshape(B, n, C, H)
+    ca = jnp.maximum(jnp.cumsum(la, axis=2), -80.0)      # inclusive
     h_init = (jnp.zeros((B, H, hd, N), f32) if h0 is None
               else h0.astype(f32))
 
@@ -154,8 +160,11 @@ def ssd_chunked(x, dt, a, Bm, Cm, h0=None, chunk: int = 32):
     return y.reshape(B, T, H, hd).astype(x.dtype), h_fin
 
 
-def mamba_layer(x, lp, cfg, conv_state=None, ssm_state=None):
-    """Returns (out, (new_conv_state, new_ssm_state))."""
+def mamba_layer(x, lp, cfg, conv_state=None, ssm_state=None, valid=None):
+    """Returns (out, (new_conv_state, new_ssm_state)). ``valid`` ((B, T)
+    bool) masks ragged-chunk padding out of the streaming state: invalid
+    steps get dt=0 / a=1 (the SSD identity update) and the conv state
+    advances only past each row's valid prefix."""
     Bsz, T, D = x.shape
     di, H, N = _dims(cfg)
     dt_ = x.dtype
@@ -163,16 +172,32 @@ def mamba_layer(x, lp, cfg, conv_state=None, ssm_state=None):
     z, xc, Bm, Cm, dt = jnp.split(
         zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
     xbc = jnp.concatenate([xc, Bm, Cm], axis=-1)
-    xbc, conv_new = causal_conv1d(xbc, lp["conv_w"].astype(dt_), conv_state)
+    n_valid = None if valid is None else valid.sum(1).astype(jnp.int32)
+    xbc, conv_new = causal_conv1d(xbc, lp["conv_w"].astype(dt_), conv_state,
+                                  n_valid=n_valid)
     xbc = jax.nn.silu(xbc)
     xc, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
     xh = xc.reshape(Bsz, T, H, SSM_HEAD_DIM)
     dt = jax.nn.softplus(dt.astype(jnp.float32) +
                          lp["dt_bias"].astype(jnp.float32))
     a = jnp.exp(-jnp.exp(lp["A_log"].astype(jnp.float32)) * dt)
+    if valid is not None:
+        vm = valid[..., None]                 # (B, T, 1) over heads
+        dt = jnp.where(vm, dt, 0.0)           # Δx -> 0: no state injection
+        a = jnp.where(vm, a, 1.0)             # decay 1: h untouched
     ck = cfg.linear_chunk
-    use_chunked = (ssm_state is None and ck and T > ck and T % ck == 0)
-    ssd = (lambda *args: ssd_chunked(*args, chunk=ck)) if use_chunked \
+    if ssm_state is None:
+        use_chunked = bool(ck and T > ck and T % ck == 0)
+        chunk = ck
+    else:
+        # streaming (serving): multi-token chunks run the block-parallel
+        # form seeded with the carried state — batched chunked prefill.
+        # Inner chunk ≤ 4 so the cumulative log-decay (≥ -20/step after
+        # the per-step clip) never reaches the -80 floor: pairwise decays
+        # stay undistorted and greedy tokens match token-by-token decode.
+        chunk = next((c for c in (4, 3, 2) if T % c == 0), 1)
+        use_chunked = T > 1 and chunk > 1
+    ssd = (lambda *args: ssd_chunked(*args, chunk=chunk)) if use_chunked \
         else ssd_scan
     y, ssm_new = ssd(xh, dt.astype(dt_), a.astype(dt_), Bm, Cm, ssm_state)
     y = y + lp["D_skip"].astype(dt_)[None, None, :, None] * xh
@@ -236,27 +261,34 @@ def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
                        ("groups", "batch", "seq_kv", "kv_heads", None), cd),
         "v": ParamSpec((G, batch_size, kv_len, K, hd),
                        ("groups", "batch", "seq_kv", "kv_heads", None), cd),
-        "pos": ParamSpec((), (), "int32"),
+        "pos": ParamSpec((batch_size,), ("batch",), "int32"),
     }
 
 
 def decode_step(params, state, batch, cfg: ModelConfig):
-    tokens = batch["tokens"]
+    """Ragged decode step. batch: {"tokens": (B, T), "t_valid": optional
+    (B,) advance counts, "reset": optional (B,) mask}. T>1 is batched
+    chunked prefill through ``ssd_chunked``; each row's conv/ssm state and
+    per-slot KV position advance by exactly ``t_valid[b]``, with padding
+    masked out of the state updates. ``reset`` zeroes a slot's conv/ssm
+    state and shared-attention KV rows inside the step (slot reuse)."""
+    tokens = batch["tokens"]  # (B, T)
+    B, T = tokens.shape
     dt_ = jnp.dtype(cfg.dtype)
-    pos = state["pos"]
+    pos, adv, valid, st = ragged_prologue(
+        state, batch, {"conv": 2, "ssm": 2, "k": 1, "v": 1})
+    conv_s, ssm_s, k_s, v_s = st["conv"], st["ssm"], st["k"], st["v"]
     x = embed_lookup(params["embed"], tokens, dtype=dt_)
-    positions = pos[None] + jnp.zeros((1,), jnp.int32)
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
     shared = params["shared"]
 
     def shared_decode(x, kc, vc):
         h = rms_norm(x, shared["attn_norm"], cfg.norm_eps)
         ap = AttnParams(shared["wq"], shared["wk"], shared["wv"], shared["wo"])
         q, k_new, v_new = qkv_project(h, ap, positions, cfg)
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            kc, k_new.astype(kc.dtype), pos, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            vc, v_new.astype(vc.dtype), pos, axis=1)
-        o = decode_attention(q, kc, vc, pos)
+        kc = update_kv_cache(kc, k_new, pos)
+        vc = update_kv_cache(vc, v_new, pos)
+        o = chunked_decode_attention(q, kc, vc, positions)
         x = x + linear(o, shared["wo"], "btnh,nhd->btd")
         h = rms_norm(x, shared["mlp_norm"], cfg.norm_eps)
         x = x + swiglu(h, MlpParams(shared["w_gate"], shared["w_up"],
@@ -264,26 +296,25 @@ def decode_step(params, state, batch, cfg: ModelConfig):
         return x, kc, vc
 
     def group_body(x, inputs):
-        gp, conv_s, ssm_s, kc, vc = inputs
+        gp, conv_c, ssm_c, kc, vc = inputs
 
         def layer_body(x, inp):
             lp, cs, ss = inp
             h, (cs_new, ss_new) = mamba_layer(
                 rms_norm(x, lp["norm"], cfg.norm_eps), lp, cfg,
-                conv_state=cs, ssm_state=ss)
+                conv_state=cs, ssm_state=ss, valid=valid)
             return x + h, (cs_new.astype(cs.dtype), ss_new)
 
         x, (conv_new, ssm_new) = jax.lax.scan(layer_body, x,
-                                              (gp, conv_s, ssm_s))
+                                              (gp, conv_c, ssm_c))
         x, kc, vc = shared_decode(x, kc, vc)
         return x, (conv_new, ssm_new, kc, vc)
 
     x, (conv, ssm, k, v) = jax.lax.scan(
-        group_body, x, (params["mamba"], state["conv"], state["ssm"],
-                        state["k"], state["v"]))
+        group_body, x, (params["mamba"], conv_s, ssm_s, k_s, v_s))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = linear(x, params["unembed"], "btd,dv->btv")
-    new_state = {"conv": conv, "ssm": ssm, "k": k, "v": v, "pos": pos + 1}
+    new_state = {"conv": conv, "ssm": ssm, "k": k, "v": v, "pos": pos + adv}
     return logits.astype(jnp.float32), new_state
 
 
@@ -333,5 +364,6 @@ register_family(ModelFamily(
     decode_state_specs=decode_state_specs,
     decode_step=decode_step,
     prefill=apply,
+    supports_ragged=True,
     pack_layouts=pack_layouts,
 ))

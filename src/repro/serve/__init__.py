@@ -45,13 +45,23 @@ Components
       tables), honouring the serving dtype; tied tables additionally serve
       the logits matmul transposed.
 
-    Families with ``ModelFamily.supports_ragged`` (transformer, internvl)
-    decode with **per-slot KV positions** and **batched chunked prefill**:
-    slots admit ragged prompt lengths with no lockstep padding; prompts
-    stream through ``decode_step`` in ``prefill_chunk``-token chunks while
-    decode-phase slots ride along in the same call (one valid token each).
-    Other families (rwkv6, zamba2, whisper) run the legacy lockstep loop —
-    but all five serve packed.
+    Every registered family decodes through ONE ragged path (the legacy
+    lockstep loop is gone): **per-slot KV positions** (``state["pos"]:
+    (B,) int32``) and **batched chunked prefill** — slots admit ragged
+    prompt lengths with no lockstep padding; prompts stream through
+    ``decode_step`` in ``prefill_chunk``-token chunks while decode-phase
+    slots ride along in the same call (one valid token each; rwkv6/zamba2
+    run their block-parallel wkv/ssd forms over the chunk). Per-request
+    state is the invariant: reusing a slot raises a ``batch["reset"]`` bit
+    and the family's jitted step zeroes that slot's KV rows and
+    recurrent/conv/ssm state before the new prompt's first token — no host
+    round-trip, no cross-request leak. whisper additionally gets per-slot
+    cross-attention prefill (``ModelFamily.cross_prefill`` encodes each
+    admitted request's ``Request.frames`` — or zeroes the slot — instead
+    of one engine-global encoding). ``submit`` enforces the KV budget:
+    requests whose prompt + max_new_tokens cannot fit are rejected
+    (``strict_admission=False`` admits them and flags the result
+    ``Generation.truncated``).
 
     ``ServeEngine.weight_bytes()`` reports resident bytes broken out as
     codes / scales / codebooks / dense (comparable across architectures);

@@ -6,12 +6,20 @@ byte, nibble-unpacked in VMEM by the fused dequant_matmul kernel — with the
 code stream + block scales resident end to end; no bf16 copy is ever
 materialised for packed tensors, including MoE expert stacks).
 
-Families with ``supports_ragged`` (transformer, internvl) run with per-slot
-KV positions and batched chunked prefill: slots admit ragged prompt lengths
-without lockstep padding, and prompts stream through ``decode_step`` in
-chunks of ``prefill_chunk`` tokens (decode-phase slots ride along in the
-same call, one valid token each). Other families fall back to the legacy
-lockstep loop.
+Every registered family serves through ONE ragged path (the legacy lockstep
+loop is gone): per-slot positions (``state["pos"]: (B,) int32``) and batched
+chunked prefill — slots admit ragged prompt lengths without lockstep
+padding, and prompts stream through ``decode_step`` in chunks of
+``prefill_chunk`` tokens (decode-phase slots ride along in the same call,
+one valid token each; recurrent families run their block-parallel
+wkv/ssd forms over the chunk). Per-request state is the invariant: when a
+slot is reused, the engine raises a ``batch["reset"]`` bit and the family's
+jitted step zeroes that slot's KV rows and recurrent/conv/ssm state before
+any new token is processed — no host round-trip, and no request ever
+observes its predecessor's state. Encoder-decoder families additionally get
+per-slot cross-attention prefill: ``ModelFamily.cross_prefill`` runs once
+per admitted request (on its ``Request.frames``, or zeroing the slot when
+absent) and is scattered into that slot's state rows.
 """
 from __future__ import annotations
 
@@ -32,6 +40,10 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     rid: int = 0
+    # encoder-decoder families: per-request encoder input ((enc_seq, D)
+    # frame embeddings for whisper), encoded once at slot admission via
+    # ModelFamily.cross_prefill. None = text-only (zero cross KV).
+    frames: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -39,36 +51,58 @@ class Generation:
     rid: int
     tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # the request hit the KV budget before max_new_tokens (only reachable
+    # with strict_admission=False — strict engines reject such requests)
+    truncated: bool = False
 
 
 class ServeEngine:
     """Fixed-slot continuous-batching decode engine.
 
-    Ragged-capable families decode with per-slot positions and batched
-    chunked prefill; weights may be held packed (``from_quantised``) so the
-    hot loop reads the quantised stream the kernel dequantises on the fly.
+    All families decode through the single ragged path: per-slot positions,
+    batched chunked prefill, and in-step per-slot state reset on admission.
+    Weights may be held packed (``from_quantised``) so the hot loop reads
+    the quantised stream the kernel dequantises on the fly.
+
+    ``strict_admission`` (default True): reject requests whose
+    ``prompt + max_new_tokens`` cannot fit the KV budget at ``submit`` time.
+    With ``strict_admission=False`` such requests are admitted and end
+    early with ``Generation.truncated`` set instead.
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
-                 kv_len: int = 256, prefill_chunk: int = 8):
+                 kv_len: int = 256, prefill_chunk: int = 8,
+                 strict_admission: bool = True):
         self.cfg = cfg
         self.fam = get_family(cfg.family)
+        if not getattr(self.fam, "supports_ragged", False):
+            raise ValueError(
+                f"family {cfg.family!r} does not implement the ragged "
+                "serving protocol (supports_ragged) — per-slot positions, "
+                "t_valid chunks and the reset mask are required to serve; "
+                "see ModelFamily in repro.models.api")
         self.params = params
         self.B = batch_slots
         self.kv_len = kv_len
-        self.ragged = bool(getattr(self.fam, "supports_ragged", False))
-        self.prefill_chunk = max(1, prefill_chunk) if self.ragged else 1
-        # ragged mode: chunk writes may spill past a slot's final position;
-        # a `prefill_chunk` slack region keeps them off valid cache rows
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.strict_admission = strict_admission
+        # chunk writes may spill past a slot's final position; a
+        # `prefill_chunk` slack region keeps them off valid cache rows
         # (they are never visible: positions ≥ kv_len are never attended)
-        self._cache_len = kv_len + (self.prefill_chunk if self.ragged else 0)
+        self._cache_len = kv_len + self.prefill_chunk
         self._state = self._zero_state()
         self._slots: List[Optional[Generation]] = [None] * batch_slots
         self._queue: List[Request] = []
         self._slot_pos = np.zeros(batch_slots, np.int32)
         self._slot_prompt: List[List[int]] = [[] for _ in range(batch_slots)]
+        # slots admitted since the last step: their first step carries
+        # batch["reset"] so the jitted step wipes the predecessor's state
+        self._needs_reset = np.zeros(batch_slots, bool)
         self._step = jax.jit(
             lambda p, s, b: self.fam.decode_step(p, s, b, self.cfg))
+        self._cross_prefill = (jax.jit(
+            lambda p, f: self.fam.cross_prefill(p, f, self.cfg))
+            if self.fam.cross_prefill is not None else None)
 
     @classmethod
     def from_quantised(cls, cfg: ModelConfig, qparams, plan,
@@ -128,17 +162,27 @@ class ServeEngine:
 
     # ------------------------------------------------------------------- api
     def submit(self, req: Request):
-        assert len(req.prompt) < self.kv_len, "prompt longer than KV budget"
+        """Queue a request. The prompt must always fit the KV budget; with
+        ``strict_admission`` (default) the whole generation must too —
+        ``prompt + max_new_tokens > kv_len`` raises instead of silently
+        truncating mid-decode. Non-strict engines admit such requests and
+        mark the resulting :class:`Generation` ``truncated``."""
+        if len(req.prompt) >= self.kv_len:
+            raise ValueError(
+                f"request rid={req.rid}: prompt length {len(req.prompt)} "
+                f"does not fit the KV budget (kv_len={self.kv_len})")
+        if self.strict_admission and \
+                len(req.prompt) + req.max_new_tokens > self.kv_len:
+            raise ValueError(
+                f"request rid={req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds the KV "
+                f"budget (kv_len={self.kv_len}) — the generation would be "
+                "truncated; shrink the request or build the engine with "
+                "strict_admission=False to accept truncated generations")
         self._queue.append(req)
 
     def run(self, max_steps: int = 512) -> List[Generation]:
         """Drive decode until queue + slots drain (or max_steps)."""
-        if self.ragged:
-            return self._run_ragged(max_steps)
-        return self._run_lockstep(max_steps)
-
-    # ------------------------------------------------- ragged (per-slot pos)
-    def _run_ragged(self, max_steps: int) -> List[Generation]:
         finished: List[Generation] = []
         for _ in range(max_steps):
             self._fill_slots()
@@ -162,10 +206,20 @@ class ServeEngine:
                     v = 1
                     toks[i, 0] = g.tokens[-1]
                 t_valid[i] = v
-            self._state["pos"] = jnp.asarray(self._slot_pos)
-            logits, self._state = self._step(
-                self.params, self._state,
-                {"tokens": jnp.asarray(toks), "t_valid": jnp.asarray(t_valid)})
+            # .copy(): jnp.asarray may alias a numpy buffer zero-copy on
+            # CPU, and _slot_pos/_needs_reset are mutated in place below —
+            # the device computation must see this iteration's snapshot
+            self._state["pos"] = jnp.asarray(self._slot_pos.copy())
+            batch = {"tokens": jnp.asarray(toks),
+                     "t_valid": jnp.asarray(t_valid)}
+            # "reset" rides only on steps that admitted a slot: steady-
+            # state decode never pays the cache-wide where. Admission
+            # always prefills, so the step compiles 3 trace variants total
+            # (T=chunk ± reset, T=1), each once per engine lifetime.
+            if self._needs_reset.any():
+                batch["reset"] = jnp.asarray(self._needs_reset.copy())
+                self._needs_reset[:] = False
+            logits, self._state = self._step(self.params, self._state, batch)
             logits = np.asarray(logits)
             for i, g in enumerate(self._slots):
                 if g is None:
@@ -177,19 +231,6 @@ class ServeEngine:
                 self._emit_token(i, g, logits[i, v - 1], finished)
         return finished
 
-    # ----------------------------------------------------- legacy (lockstep)
-    def _run_lockstep(self, max_steps: int) -> List[Generation]:
-        finished: List[Generation] = []
-        for _ in range(max_steps):
-            self._fill_slots()
-            if all(s is None for s in self._slots):
-                break
-            tokens = self._current_tokens()
-            logits, self._state = self._step(self.params, self._state,
-                                             {"tokens": tokens})
-            self._advance(np.asarray(logits[:, 0]), finished)
-        return finished
-
     # ------------------------------------------------------------- internals
     def _fill_slots(self):
         for i in range(self.B):
@@ -199,9 +240,24 @@ class ServeEngine:
                 self._slots[i]._req = req  # type: ignore
                 self._slot_prompt[i] = list(req.prompt)
                 self._slot_pos[i] = 0
-                # ragged mode: stale cache rows of the previous occupant are
-                # overwritten before they are read (write-before-read), so
-                # only the position needs resetting — done via _slot_pos.
+                # the first step after admission carries reset[i]=True: the
+                # jitted step zeroes the slot's KV rows and recurrent state
+                # (the predecessor's) before this prompt's first token
+                self._needs_reset[i] = True
+                if self._cross_prefill is not None:
+                    self._admit_cross(i, req)
+
+    def _admit_cross(self, i: int, req: Request):
+        """Per-slot cross-attention prefill: encode this request's frames
+        (or zeros for text-only) and scatter into slot i's state rows —
+        cross KV is owned by admission, not by the in-step reset mask."""
+        if req.frames is not None:
+            frames = jnp.asarray(req.frames)[None]      # (1, enc_seq, D)
+            entries = self._cross_prefill(self.params, frames)
+        else:
+            entries = self.fam.cross_prefill(self.params, None, self.cfg)
+        for key, val in entries.items():
+            self._state[key] = self._state[key].at[:, i].set(val[:, 0])
 
     def _emit_token(self, i: int, g: Generation, logits_row: np.ndarray,
                     finished: List[Generation]):
@@ -210,42 +266,21 @@ class ServeEngine:
             z = logits_row / req.temperature
             p = np.exp(z - z.max())
             p /= p.sum()
-            tok = int(np.random.default_rng(len(g.tokens)).choice(
-                len(p), p=p))
+            # seed from (rid, index): decoupled across slots — one stream
+            # per request, reproducible for a given rid regardless of which
+            # slot or wave it lands in
+            rng = np.random.default_rng((req.rid, len(g.tokens)))
+            tok = int(rng.choice(len(p), p=p))
         else:
             tok = int(np.argmax(logits_row))
         g.tokens.append(tok)
-        if (len(g.tokens) >= req.max_new_tokens
-                or self._slot_pos[i] >= self.kv_len - 1):
+        hit_budget = len(g.tokens) >= req.max_new_tokens
+        hit_kv = self._slot_pos[i] >= self.kv_len - 1
+        if hit_budget or hit_kv:
             g.done = True
+            g.truncated = bool(hit_kv and not hit_budget)
             finished.append(g)
             self._slots[i] = None
-
-    def _current_tokens(self):
-        toks = np.zeros((self.B, 1), np.int32)
-        for i, g in enumerate(self._slots):
-            if g is None:
-                continue
-            consumed = int(self._slot_pos[i])
-            prompt = self._slot_prompt[i]
-            if consumed < len(prompt):
-                toks[i, 0] = prompt[consumed]
-            elif g.tokens:
-                toks[i, 0] = g.tokens[-1]
-            else:
-                toks[i, 0] = prompt[-1]
-        return jnp.asarray(toks)
-
-    def _advance(self, logits: np.ndarray, finished: List[Generation]):
-        # NOTE: lockstep fallback for families without per-slot positions
-        # (state pos is a shared scalar); slots stay in step by padding.
-        for i, g in enumerate(self._slots):
-            if g is None:
-                continue
-            self._slot_pos[i] += 1
-            if self._slot_pos[i] < len(self._slot_prompt[i]):
-                continue  # still prefilling this slot
-            self._emit_token(i, g, logits[i], finished)
     # ------------------------------------------------------------------------
 
 

@@ -66,7 +66,9 @@ def test_decode_smoke(arch_id):
     assert logits.shape == (B, 1, cfg.vocab)
     assert bool(jnp.isfinite(logits).all())
     assert bool(jnp.isfinite(logits2).all())
-    # pos is scalar for lockstep families, (B,) for per-slot (ragged) ones
+    # pos is per-slot ((B,) int32) in every family — the ragged serving
+    # protocol (the legacy lockstep scalar is gone)
+    assert np.asarray(state["pos"]).shape == (B,)
     assert np.all(np.asarray(state["pos"]) == 2)
 
 

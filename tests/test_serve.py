@@ -34,7 +34,7 @@ class TestEngine:
             toks = np.concatenate([toks, nxt], 1)
         np.testing.assert_array_equal(gen, toks[:, prompt.shape[1]:])
 
-    def test_engine_batched_same_prompt_lockstep(self):
+    def test_engine_batched_same_prompt(self):
         params = _params()
         eng = ServeEngine(CFG, params, batch_slots=2, kv_len=32)
         for rid in range(2):
@@ -183,7 +183,9 @@ class TestUnifiedPackedFamilies:
     """The unified projection API: rwkv6 / zamba2 / whisper serve packed
     through `layers.linear` exactly like the transformer — greedy tokens
     identical to the dequantised-dense engine, with the big projections
-    held as PackedTensors."""
+    held as PackedTensors. Both engines now run the ragged path (per-slot
+    positions + chunked prefill through the block-parallel wkv/ssd forms),
+    so this doubles as packed-vs-dense parity for the new ragged paths."""
 
     FAMS = {
         "rwkv6-1.6b": ("['layers']['wr']", 10),
@@ -222,7 +224,8 @@ class TestUnifiedPackedFamilies:
 
     @pytest.mark.parametrize("arch", list(FAMS))
     def test_packed_greedy_tokens_identical(self, arch):
-        eng_p, eng_d = self._engines(arch, batch_slots=2, kv_len=32)
+        eng_p, eng_d = self._engines(arch, batch_slots=2, kv_len=32,
+                                     prefill_chunk=4)
         for eng in (eng_p, eng_d):
             eng.submit(Request(prompt=[5, 9, 3, 7], max_new_tokens=6, rid=0))
             eng.submit(Request(prompt=[11, 4], max_new_tokens=6, rid=1))
@@ -298,7 +301,7 @@ class TestEmptyPackLayoutFailFast:
             name="_nopack_stub", param_specs=fam.param_specs, init=fam.init,
             apply=fam.apply, decode_state_specs=fam.decode_state_specs,
             decode_step=fam.decode_step, prefill=fam.prefill,
-            pack_layouts=empty_pack_layouts)
+            supports_ragged=True, pack_layouts=empty_pack_layouts)
         register_family(stub)
         try:
             cfg = CFG.replace(family="_nopack_stub")
