@@ -10,14 +10,22 @@ through the same ``layers.linear``, so one benchmark sweeps them all:
   * rwkv6 / zamba2 / whisper (linear-attention, hybrid SSM and enc-dec
     families swept onto the unified `linear`).
 
+  * gemma3 (5:1 local:global attention): local layer groups serve from
+    **ring-buffer** KV caches of only ``window + prefill_chunk`` slots
+    (the grouped decode-cache subsystem, ``serve.cache``), so its rows
+    also measure resident cache bytes against the uniform full-length
+    allocation — the rolling-window saving is a recorded number, not an
+    assertion.
+
 Every family runs the single ragged serving path: per-slot positions,
 batched chunked prefill (rwkv6/zamba2 through their block-parallel
 wkv/ssd forms) and in-step slot reset. Reports resident weight bytes
 (codes / scales / codebooks / dense broken out, comparable across
-architectures) and end-to-end decode tokens/s per path (prompt chunks of
-``prefill_chunk`` tokens — recorded per row). On CPU the jnp oracle runs
-instead of the Pallas kernel, so tokens/s validates the plumbing; the
-bandwidth win is realised on TPU.
+architectures), resident decode-cache bytes (per cache group: windowed
+vs global, plus the uniform baseline), and end-to-end decode tokens/s
+per path (prompt chunks of ``prefill_chunk`` tokens — recorded per row).
+On CPU the jnp oracle runs instead of the Pallas kernel, so tokens/s
+validates the plumbing; the bandwidth win is realised on TPU.
 
 Besides the usual results/bench row dump, this module writes the
 machine-readable ``BENCH_serve.json`` (tokens/s + resident weight bytes +
@@ -46,6 +54,7 @@ from .common import write_rows
 FMT = "babsmax64:n4"        # 4-bit ∛p Normal, block-64 absmax scales
 MOE_FMT = "babsmax16:n4"    # qwen2-moe smoke: d_expert=48 tiles by 16
 ZAMBA_FMT = "babsmax32:n4"  # zamba2 smoke: out_proj/shared tile by 32
+GEMMA_FMT = "babsmax32:n4"  # gemma3 smoke: d_model=64 / hd=32 tile by 32
 N_REQ = 6
 MAX_NEW = 24
 BENCH_SERVE_OUT = os.environ.get("REPRO_BENCH_SERVE_OUT", "BENCH_serve.json")
@@ -90,6 +99,7 @@ def _bench_pair(tag, cfg, fmt, reqs, **eng_kw):
             (f"{tag}/packed4", ServeEngine.from_quantised(
                 cfg, qparams, plan, **eng_kw))]:
         wb = eng.weight_bytes()
+        cb = eng.cache_bytes()
         done, tps = _drive(eng, reqs)
         outs[path] = {g.rid: g.tokens for g in done}
         row = dict(path=path, fmt=fmt, family=wb["family"],
@@ -97,6 +107,13 @@ def _bench_pair(tag, cfg, fmt, reqs, **eng_kw):
                    packed_bytes=wb["packed"], dense_bytes=wb["dense"],
                    code_bytes=wb["codes"], scale_bytes=wb["scales"],
                    codebook_bytes=wb["codebooks"],
+                   # grouped decode-cache accounting: windowed ring groups
+                   # vs the uniform full-length baseline (serve.cache)
+                   cache_kv_bytes=cb["kv"],
+                   cache_uniform_kv_bytes=cb["uniform_kv"],
+                   cache_ratio_vs_uniform=cb["cache_ratio_vs_uniform"],
+                   cache_groups=cb["cache_groups"],
+                   cache_total_bytes=cb["total"],
                    tokens_per_s=round(tps, 1), n_requests=len(done),
                    n_submitted=n_submitted,
                    # decode tokens/s under the ragged path: prompts stream
@@ -142,6 +159,11 @@ def _family_table(fast: bool):
         "paper-100m-tied": ("paper-100m", size, FMT,
                             dict(tie_embeddings=True), 4, eng),
         "qwen2-moe": ("qwen2-moe-a2.7b", "smoke", MOE_FMT, {}, 4, eng),
+        # gemma3: 5:1 local(16):global — kv_len 256 so the windowed-group
+        # ring allocation (window + chunk slots/layer) is measured against
+        # a serving-length uniform baseline; decode laps the ring
+        "gemma3": ("gemma3-1b", "smoke", GEMMA_FMT, {}, 4,
+                   dict(batch_slots=2, kv_len=256, prefill_chunk=4)),
         "rwkv6": ("rwkv6-1.6b", "smoke", FMT, {}, 4, eng),
         "zamba2": ("zamba2-2.7b", "smoke", ZAMBA_FMT, {}, 4, eng),
         "whisper": ("whisper-large-v3", "smoke", FMT, {}, 4, eng),
@@ -212,8 +234,14 @@ def _write_bench_serve(rows):
 # scale block, so it legitimately serves dequantised — its ceiling reflects
 # that; everything else must hit the paper's full nibble-packed cut.
 _RATIO_CEILING = {"paper-100m": 0.15, "paper-100m-tied": 0.15,
-                  "rwkv6": 0.2, "whisper": 0.2, "zamba2": 0.7,
-                  "qwen2-moe": 0.2}
+                  "gemma3": 0.2, "rwkv6": 0.2, "whisper": 0.2,
+                  "zamba2": 0.7, "qwen2-moe": 0.2}
+
+# resident-cache ceiling vs the uniform full-length allocation: gemma3's
+# 5:1 local:global pattern must realise the rolling-window saving at the
+# benchmarked kv_len (measured, not asserted); pure-global families must
+# allocate exactly the uniform bytes (the ring subsystem is a no-op)
+_CACHE_RATIO_CEILING = {"gemma3": 0.25}
 
 
 def check(rows):
@@ -231,6 +259,14 @@ def check(rows):
                          f"master (> {_RATIO_CEILING[tag]})")
         if by[f"{tag}/packed4"]["n_nibble_leaves"] < 1:
             fails.append(f"{tag}: no nibble-packed (bits=4) leaves")
+        cache_ceiling = _CACHE_RATIO_CEILING.get(tag, 1.0)
+        cache_ratio = by[f"{tag}/packed4"]["cache_ratio_vs_uniform"]
+        if cache_ratio > cache_ceiling:
+            fails.append(f"{tag}: resident cache {cache_ratio}x of the "
+                         f"uniform allocation (> {cache_ceiling})")
+        if cache_ceiling == 1.0 and cache_ratio < 1.0:
+            fails.append(f"{tag}: pure-global family allocated a windowed "
+                         f"cache ({cache_ratio}x uniform)")
         for path in (f"{tag}/packed4", f"{tag}/f32"):
             if by[path]["n_requests"] != by[path]["n_submitted"]:
                 fails.append(f"{path}: dropped requests "

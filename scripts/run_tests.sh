@@ -12,8 +12,13 @@
 #                                   oracles
 #   scripts/run_tests.sh --serve    serving tests only (engine, packed
 #                                   serving, ragged slot reuse / reset,
-#                                   chunked prefill) — fast iteration on
-#                                   the continuous-batching path
+#                                   chunked prefill, ring-buffer windowed
+#                                   caches) — fast iteration on the
+#                                   continuous-batching path
+#   scripts/run_tests.sh --windowed gemma3 ring-cache parity subset only
+#                                   (ring vs masked-full-cache greedy
+#                                   parity, wrap-crossing prefill, cache
+#                                   accounting)
 #   scripts/run_tests.sh [pytest args...]   extra args forwarded to pytest
 #
 # Works offline: tests/conftest.py shims `hypothesis` when it is missing.
@@ -31,6 +36,11 @@ if [ "${1:-}" = "--kernels" ]; then
 fi
 if [ "${1:-}" = "--serve" ]; then
     shift
-    exec python -m pytest -q tests/test_serve.py tests/test_serve_ragged.py "$@"
+    exec python -m pytest -q tests/test_serve.py tests/test_serve_ragged.py \
+        tests/test_serve_windowed.py "$@"
+fi
+if [ "${1:-}" = "--windowed" ]; then
+    shift
+    exec python -m pytest -q tests/test_serve_windowed.py "$@"
 fi
 exec python -m pytest -q -m "not slow" "$@"

@@ -43,7 +43,13 @@ def main(argv=None):
     ap.add_argument("--relaxed-admission", action="store_true",
                     help="admit requests whose prompt + max_new exceeds "
                          "--kv-len and flag the truncated generations, "
-                         "instead of rejecting them at submit")
+                         "instead of rejecting them at submit (the budget "
+                         "is the global-layer cache length; windowed ring "
+                         "groups never overflow)")
+    ap.add_argument("--uniform-cache", action="store_true",
+                    help="disable the rolling-window ring allocation for "
+                         "local-attention layer groups and serve from the "
+                         "masked full-length baseline layout")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch, args.variant)
@@ -65,7 +71,8 @@ def main(argv=None):
             eng = ServeEngine.from_quantised(
                 cfg, plan.quantise(params), plan, batch_slots=args.slots,
                 kv_len=args.kv_len, prefill_chunk=args.prefill_chunk,
-                strict_admission=not args.relaxed_admission)
+                strict_admission=not args.relaxed_admission,
+                windowed_cache=not args.uniform_cache)
             wb = eng.weight_bytes()
             if wb["packed"] == 0:
                 # the family has layouts but the format rejected every
@@ -90,7 +97,16 @@ def main(argv=None):
         eng = ServeEngine(cfg, params, batch_slots=args.slots,
                           kv_len=args.kv_len,
                           prefill_chunk=args.prefill_chunk,
-                          strict_admission=not args.relaxed_admission)
+                          strict_admission=not args.relaxed_admission,
+                          windowed_cache=not args.uniform_cache)
+    cb = eng.cache_bytes()
+    if cb["kv"] < cb["uniform_kv"]:
+        print(f"[serve] decode cache {cb['kv']:,} bytes "
+              f"({cb['cache_ratio_vs_uniform']}x the uniform "
+              f"{cb['uniform_kv']:,}: windowed layer groups serve from "
+              "ring buffers)")
+    else:
+        print(f"[serve] decode cache {cb['total']:,} bytes resident")
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=4).tolist()

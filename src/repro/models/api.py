@@ -157,7 +157,16 @@ class ModelFamily:
     init: Callable                  # (rng, cfg) -> params
     apply: Callable                 # (params, batch, cfg) -> logits
     # decoding (None for encoder-only):
-    decode_state_specs: Callable = None  # (cfg, batch, kv_len) -> tree[ParamSpec]
+    # decode_state_specs(cfg, batch, kv_len, slack=0, windowed=True)
+    # -> tree[ParamSpec]. kv_len is the position budget (the global-layer
+    # cache length); slack is the engine's chunk-write spill region
+    # (prefill_chunk). Attention-bearing families return GROUPED KV
+    # entries: one ``k{g}``/``v{g}`` stack per window-homogeneous layer
+    # group (serve.cache.CacheSpec), where global groups allocate
+    # kv_len + slack and windowed groups allocate a min(window, kv_len)
+    # + slack ring buffer. windowed=False is the masked-full-cache
+    # baseline: same grouped keys, every group at the full length.
+    decode_state_specs: Callable = None
     decode_step: Callable = None    # (params, state, batch, cfg) -> (logits, state)
     prefill: Callable = None        # (params, batch, cfg) -> (logits, state)
     # --- serving capabilities -------------------------------------------------
@@ -170,11 +179,12 @@ class ModelFamily:
     #     real; the row's state (KV position, recurrent/conv/ssm state,
     #     token-shift buffers) advances by exactly that count and padding
     #     is masked out of every state update;
-    #   * "reset" (B,) bool — zero that slot's per-request state (KV rows,
-    #     recurrent state) and position inside the jitted step before any
-    #     token is processed. The engine raises it on the first step after
-    #     a slot is reused, so no request ever observes its predecessor's
-    #     state and no host round-trip is needed.
+    #   * "reset" (B,) bool — zero that slot's per-request state (the
+    #     grouped KV stacks k{g}/v{g}, recurrent state) and position
+    #     inside the jitted step before any token is processed. The engine
+    #     raises it on the first step after a slot is reused, so no
+    #     request ever observes its predecessor's state and no host
+    #     round-trip is needed.
     # T=1 is plain decode; T>1 is batched chunked prefill (recurrent
     # families route it through their block-parallel wkv/ssd forms).
     supports_ragged: bool = False
@@ -185,6 +195,14 @@ class ModelFamily:
     # return zeroed entries (text-only request / stale-slot wipe). These
     # entries are owned by admission, not by the in-step "reset" mask.
     cross_prefill: Callable = None
+    # cache_spec: optional — (cfg, batch, kv_len, slack=0, windowed=True)
+    # -> serve.cache.CacheSpec, the self-attention cache geometry behind
+    # the grouped ``k{g}``/``v{g}`` decode-state entries. The engine uses
+    # it for byte accounting (``ServeEngine.cache_bytes``): per-group
+    # windowed-vs-global breakdown against the uniform full-length
+    # baseline. None for families with no attention KV (rwkv6's recurrent
+    # state is O(1) in sequence length).
+    cache_spec: Callable = None
     # pack_layouts: required — see the class docstring. Declared last for
     # dataclass field ordering; validated at registration.
     pack_layouts: Callable = None
@@ -230,6 +248,31 @@ def ragged_prologue(state, batch, reset_axes):
     valid = (jnp.arange(T, dtype=jnp.int32)[None, :] < adv[:, None]
              if (T > 1 or t_valid is not None) else None)
     return pos, adv, valid, entries
+
+
+def ring_prologue(state, batch, n_groups: int, extra_reset=None):
+    """The grouped-cache variant of :func:`ragged_prologue` — the shared
+    prologue of the ring decode-cache protocol. The reset set is derived
+    from the cache groups: every group's stacked ``k{g}``/``v{g}`` cache
+    wipes at batch axis 1 (the grouped layout is always (Lg, B, S, ...)),
+    plus any family extras (``extra_reset``, e.g. zamba2's conv/ssm at
+    axis 2 or rwkv6-style recurrent entries).
+
+    Wiping a ring group on reset is defence in depth rather than a
+    correctness requirement: the wrap-correct masks are built from
+    reconstructed positions (``serve.cache.ring_positions``), so a reused
+    slot's stale keys are already invisible — but zeroed rows make state
+    leaks impossible even if a mask regresses. Returns the same
+    ``(pos, adv, valid, entries)`` as :func:`ragged_prologue`, with
+    ``entries`` holding the possibly-wiped cache stacks under their
+    ``k{g}``/``v{g}`` keys."""
+    axes = {}
+    for g in range(n_groups):
+        axes[f"k{g}"] = 1
+        axes[f"v{g}"] = 1
+    if extra_reset:
+        axes.update(extra_reset)
+    return ragged_prologue(state, batch, axes)
 
 
 def register_family(fam: ModelFamily):

@@ -44,8 +44,12 @@ def apply(params, batch, cfg: ModelConfig):
     return transformer.apply(params, inner, cfg)
 
 
-def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int):
-    return transformer.decode_state_specs(cfg, batch_size, kv_len)
+def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int,
+                       slack: int = 0, windowed: bool = True):
+    # grouped ring-cache specs, same as the backbone (internlm2 is pure
+    # global attention, so this is the single full-length group k0/v0)
+    return transformer.decode_state_specs(cfg, batch_size, kv_len, slack,
+                                          windowed)
 
 
 def decode_step(params, state, batch, cfg: ModelConfig):
@@ -70,5 +74,6 @@ register_family(ModelFamily(
     # prefill + the in-step reset mask + packed backbone weights (the vis
     # projector stays dense — it only runs in prefill's apply())
     supports_ragged=True,
+    cache_spec=transformer.cache_spec,
     pack_layouts=transformer.pack_layouts,
 ))

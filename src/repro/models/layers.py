@@ -298,11 +298,15 @@ def flash_attention(q, k, v, q_positions, k_positions, *, causal: bool = True,
 
 
 def decode_attention(q, k_cache, v_cache, q_position, *, window=0,
-                     kv_positions=None):
+                     kv_positions=None, ring=False):
     """Single-token attention against a KV cache (no chunking needed: the
     score tensor is (B, H, S) which is small for decode).
 
     q: (B, 1, H, hd); caches: (B, S, K, hd); q_position: scalar current pos.
+    ``ring=True``: the cache is a ring buffer written at ``pos % S`` — slot
+    positions are reconstructed from ``q_position`` (the highest written
+    position) instead of being the slot index; negative reconstructions
+    (never-written slots) are masked.
     """
     B, _, H, hd = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
@@ -310,9 +314,14 @@ def decode_attention(q, k_cache, v_cache, q_position, *, window=0,
     qg = q.reshape(B, K, G, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(qg.dtype))
     s = s.astype(jnp.float32) * hd ** -0.5
-    if kv_positions is None:
-        kv_positions = jnp.arange(S)
-    mask = kv_positions <= q_position
+    if ring:
+        from repro.serve.cache import ring_positions
+        kv_positions = ring_positions(jnp.asarray(q_position, jnp.int32), S)
+        mask = (kv_positions <= q_position) & (kv_positions >= 0)
+    else:
+        if kv_positions is None:
+            kv_positions = jnp.arange(S)
+        mask = kv_positions <= q_position
     mask &= jnp.where(window > 0, q_position - kv_positions < window, True)
     s = jnp.where(mask[None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
@@ -320,7 +329,8 @@ def decode_attention(q, k_cache, v_cache, q_position, *, window=0,
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
-def chunked_decode_attention(q, k_cache, v_cache, q_positions, *, window=0):
+def chunked_decode_attention(q, k_cache, v_cache, q_positions, *, window=0,
+                             ring=False):
     """Multi-token decode attention with **per-slot** positions: a chunk of
     T query tokens per batch row against that row's KV cache. Used for both
     single-token decode (T=1) and batched chunked prefill — slots need not
@@ -328,30 +338,57 @@ def chunked_decode_attention(q, k_cache, v_cache, q_positions, *, window=0):
 
     q: (B, T, H, hd); caches: (B, S, K, hd); q_positions: (B, T) absolute
     positions of the query tokens (the new tokens' k/v must already be
-    written into the cache at those positions)."""
+    written into the cache at those positions).
+
+    ``ring=True`` (windowed layers): the cache is a ring buffer written at
+    ``pos % S``. Each row's slot positions are reconstructed from its
+    highest written position (``q_positions[:, -1]`` — chunk writes always
+    cover the query positions), making the causal/window masks wrap-correct
+    with no stored per-slot positions: a slot overwritten by a later wrap
+    reconstructs to its new position (masked causally until that position
+    is queried, by which point the content is real — write-before-read),
+    and never-written slots reconstruct negative. Requires
+    ``S ≥ window + T - 1`` so ragged-chunk padding writes only clobber
+    keys already outside every reachable window (see serve.cache)."""
     B, T, H, hd = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
     G = H // K
     qg = q.reshape(B, T, K, G, hd)
     s = jnp.einsum("btkgh,bskh->btkgs", qg, k_cache.astype(qg.dtype))
     s = s.astype(jnp.float32) * hd ** -0.5
-    kv = jnp.arange(S)
-    mask = kv[None, None, :] <= q_positions[:, :, None]           # causal
-    mask &= jnp.where(window > 0,
-                      q_positions[:, :, None] - kv[None, None, :] < window,
-                      True)
+    if ring:
+        from repro.serve.cache import ring_positions
+        kv = ring_positions(q_positions[:, -1], S)                # (B, S)
+        mask = kv[:, None, :] <= q_positions[:, :, None]          # causal
+        mask &= q_positions[:, :, None] - kv[:, None, :] < window
+        mask &= kv[:, None, :] >= 0                               # unwritten
+    else:
+        kv = jnp.arange(S)
+        mask = kv[None, None, :] <= q_positions[:, :, None]       # causal
+        mask &= jnp.where(window > 0,
+                          q_positions[:, :, None] - kv[None, None, :] < window,
+                          True)
     s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("btkgs,bskh->btkgh", p.astype(v_cache.dtype), v_cache)
     return out.reshape(B, T, H, hd).astype(q.dtype)
 
 
-def update_kv_cache(cache, new, pos):
+def update_kv_cache(cache, new, pos, *, ring=False):
     """Write T new entries per batch row at that row's own position.
-    cache: (B, S, K, hd); new: (B, T, K, hd); pos: (B,) int32."""
-    return jax.vmap(
-        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
-            c, n, p, axis=0))(cache, new.astype(cache.dtype), pos)
+    cache: (B, S, K, hd); new: (B, T, K, hd); pos: (B,) int32.
+    ``ring=True`` writes at ``(pos + t) % S`` (rolling-window buffers;
+    the scatter indices are distinct because T ≤ S always holds — ring
+    length ≥ window + chunk - 1)."""
+    if not ring:
+        return jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+                c, n, p, axis=0))(cache, new.astype(cache.dtype), pos)
+    from repro.serve.cache import ring_slots
+    S, T = cache.shape[1], new.shape[1]
+    idx = ring_slots(pos[:, None] + jnp.arange(T, dtype=pos.dtype), S)
+    return jax.vmap(lambda c, n, i: c.at[i].set(n))(
+        cache, new.astype(cache.dtype), idx)
 
 
 def attn_block(x, p: AttnParams, positions, cfg, window=0):

@@ -275,10 +275,13 @@ def apply(params, batch, cfg: ModelConfig):
 
 # ------------------------------------------------------------------ decode
 
-def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
-    """Recurrent state: O(1) in sequence length (kv_len unused — that is the
-    point of an SSM for the long_500k cell). ``pos`` is per-slot ((B,)
-    int32): the ragged serving protocol (see ``ModelFamily``)."""
+def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int,
+                       slack: int = 0, windowed: bool = True) -> dict:
+    """Recurrent state: O(1) in sequence length (kv_len — and the grouped
+    ring-cache knobs ``slack``/``windowed`` — unused: there is no KV cache
+    to group; that is the point of an SSM for the long_500k cell). ``pos``
+    is per-slot ((B,) int32): the ragged serving protocol (see
+    ``ModelFamily``)."""
     D, L = cfg.d_model, cfg.n_layers
     H, hd = _n_heads(cfg), HEAD_DIM
     cd = cfg.dtype

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .api import (ModelConfig, ModelFamily, ParamSpec, ragged_prologue,
+from .api import (ModelConfig, ModelFamily, ParamSpec, ring_prologue,
                   register_family)
 from .layers import (AttnParams, MlpParams, MoeParams, attn_block,
                      chunked_decode_attention, embed_lookup, flash_attention,
@@ -158,25 +158,39 @@ def _unembed(x, params, cfg: ModelConfig):
 # Decode path (serving)
 # ---------------------------------------------------------------------------
 
-def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
-    """KV cache specs: uniform full-length per-layer cache; local (windowed)
-    layers mask by window. ``pos`` is **per-slot** ((B,) int32) so serving
-    slots with different prompt lengths need not run in lockstep. (A rolling
-    window cache for local layers — ~6× cache saving for gemma3's 5:1
-    pattern — is a recorded perf-iteration candidate; baseline keeps exact
-    layer ordering simple, see EXPERIMENTS §Perf.)"""
-    K, hd, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
-    cd = cfg.kv_dtype or cfg.dtype
-    shape = (L, batch_size, kv_len, K, hd)
+def cache_spec(cfg: ModelConfig, batch_size: int, kv_len: int,
+               slack: int = 0, windowed: bool = True):
+    """Self-attention cache geometry (``serve.cache.CacheSpec``): layers
+    grouped by their window, global groups at ``kv_len + slack``, windowed
+    groups as ``min(window, kv_len) + slack`` ring buffers. ``windowed=
+    False`` keeps the grouping but allocates every group at the full
+    length — the masked-full-cache baseline / ring kill-switch."""
+    from repro.serve.cache import build_cache_spec
+    return build_cache_spec(
+        cfg.window_pattern(), batch_size, kv_len, slack=slack,
+        kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+        dtype=cfg.kv_dtype or cfg.dtype, windowed=windowed)
+
+
+def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int,
+                       slack: int = 0, windowed: bool = True) -> dict:
+    """Grouped KV cache specs: one ``k{g}``/``v{g}`` stack per window-
+    homogeneous layer group (see :func:`cache_spec`). A pure-global stack
+    is the single group ``k0``/``v0`` at full length — byte-for-byte the
+    old uniform allocation; local (windowed) groups allocate only
+    ``window + slack`` ring slots instead of masking a full-length cache
+    (~6× resident-cache saving on gemma3's 5:1 pattern at serving
+    lengths). ``pos`` is **per-slot** ((B,) int32) so serving slots with
+    different prompt lengths need not run in lockstep."""
+    spec = cache_spec(cfg, batch_size, kv_len, slack, windowed)
     return {
-        "k": ParamSpec(shape, ("layers", "batch", "seq_kv", "kv_heads", None), cd),
-        "v": ParamSpec(shape, ("layers", "batch", "seq_kv", "kv_heads", None), cd),
+        **spec.state_specs(),
         "pos": ParamSpec((batch_size,), ("batch",), "int32"),
     }
 
 
 def decode_step(params, state, batch, cfg: ModelConfig):
-    """Chunked decode step with per-slot positions.
+    """Chunked decode step with per-slot positions and grouped caches.
 
     batch: {"tokens": (B, T), "t_valid": optional (B,) int32, "reset":
     optional (B,) mask}. T=1 is plain decode; T>1 is (batched) chunked
@@ -184,33 +198,41 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     and advances by ``t_valid[b]`` (default T). Rows whose chunk is partly
     padding (ragged prompts, or decode rows riding in a prefill-sized call)
     advance by their valid count; the k/v written beyond it land at
-    positions ≥ the row's new pos, which are always rewritten before they
-    become visible to attention (write-before-read), so padding is
-    harmless. A set ``reset`` bit zeroes that slot's KV rows and position
-    inside the step (slot reuse — see the ``supports_ragged`` protocol in
-    ``models.api``). Returns (logits (B, T, V), state); row b's next-token
-    logits live at index t_valid[b]-1.
+    positions ≥ the row's new pos (mod the ring length for windowed
+    groups), which are never visible to attention (write-before-read in
+    linear caches; reconstruction-masked and outside every reachable
+    window in ring caches), so padding is harmless. A set ``reset`` bit
+    zeroes that slot's KV rows — in every cache group — and position
+    inside the step (slot reuse — see ``ring_prologue`` in ``models.api``).
+    Returns (logits (B, T, V), state); row b's next-token logits live at
+    index t_valid[b]-1.
 
-    Uniform-cache models run the layer scan directly over the stacked cache;
-    weights may be PackedTensors (serving from packed quantised weights) —
-    dense weights take the identical einsum path as before."""
+    A homogeneous all-global stack (the common case) scans the single
+    group's cache alongside the layer params exactly as the uniform cache
+    always did. Heterogeneous local:global stacks (gemma3) carry one cache
+    stack per group through the scan and each layer switches into its
+    group's stack at its group-local slot: local layers write at
+    ``pos % ring_len`` and mask via wrap-correct reconstructed positions
+    (``layers.chunked_decode_attention(ring=True)``), global layers keep
+    the linear full-length path. Weights may be PackedTensors (serving
+    from packed quantised weights) — dense weights take the identical
+    einsum path as before."""
+    from repro.serve.cache import layer_groups
     tokens = batch["tokens"]
     B, T = tokens.shape
     dt = jnp.dtype(cfg.dtype)
-    pos, adv, _, st = ragged_prologue(state, batch, {"k": 1, "v": 1})
-    k_s, v_s = st["k"], st["v"]
+    groups = layer_groups(cfg.window_pattern())
+    pos, adv, _, st = ring_prologue(state, batch, len(groups))
     x = embed_lookup(params["embed"], tokens, dtype=dt)
     positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
 
-    windows = jnp.asarray(cfg.window_pattern())
-
-    def layer_decode(x, lp, k_cache, v_cache, window):
+    def layer_decode(x, lp, k_cache, v_cache, window, ring):
         h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
         q, k_new, v_new = qkv_project(h, _layer_attn_params(lp), positions, cfg)
-        k_cache = update_kv_cache(k_cache, k_new, pos)
-        v_cache = update_kv_cache(v_cache, v_new, pos)
+        k_cache = update_kv_cache(k_cache, k_new, pos, ring=ring)
+        v_cache = update_kv_cache(v_cache, v_new, pos, ring=ring)
         o = chunked_decode_attention(q, k_cache, v_cache, positions,
-                                     window=window)
+                                     window=window, ring=ring)
         x = x + linear(o, lp["wo"], "btnh,nhd->btd")
         h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
         if cfg.n_experts:
@@ -223,15 +245,64 @@ def decode_step(params, state, batch, cfg: ModelConfig):
             y = swiglu(h, MlpParams(lp["w_gate"], lp["w_up"], lp["w_down"]))
         return x + y, k_cache, v_cache
 
-    def body(x, inputs):
-        lp, kc, vc, window = inputs
-        x, kc, vc = layer_decode(x, lp, kc, vc, window)
-        return x, (kc, vc)
+    if len(groups) == 1 and groups[0][0] == 0:
+        # homogeneous all-global stack: the cache rides the scan xs
+        windows = jnp.asarray(cfg.window_pattern())
 
-    x, (k_new, v_new) = jax.lax.scan(
-        body, x, (params["layers"], k_s, v_s, windows))
-    new_state = {"k": k_new, "v": v_new, "pos": pos + adv}
+        def body(x, inputs):
+            lp, kc, vc, window = inputs
+            x, kc, vc = layer_decode(x, lp, kc, vc, window, ring=False)
+            return x, (kc, vc)
 
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], st["k0"], st["v0"], windows))
+        new_caches = {"k0": k_new, "v0": v_new}
+    else:
+        # heterogeneous stack: group caches ride the scan carry; layer l
+        # switches into its group's stack at its group-local slot
+        gid = np.zeros(cfg.n_layers, np.int32)
+        gslot = np.zeros(cfg.n_layers, np.int32)
+        for g, (_, layers) in enumerate(groups):
+            for j, l in enumerate(layers):
+                gid[l], gslot[l] = g, j
+        caches = tuple((st[f"k{g}"], st[f"v{g}"])
+                       for g in range(len(groups)))
+
+        def make_branch(g):
+            window = groups[g][0]
+
+            def branch(op):
+                x, caches, lp, slot = op
+                kc = jax.lax.dynamic_index_in_dim(caches[g][0], slot, 0,
+                                                  keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(caches[g][1], slot, 0,
+                                                  keepdims=False)
+                x, kc, vc = layer_decode(x, lp, kc, vc, window,
+                                         ring=window > 0)
+                kg = jax.lax.dynamic_update_index_in_dim(
+                    caches[g][0], kc, slot, 0)
+                vg = jax.lax.dynamic_update_index_in_dim(
+                    caches[g][1], vc, slot, 0)
+                return x, tuple((kg, vg) if i == g else c
+                                for i, c in enumerate(caches))
+            return branch
+
+        branches = [make_branch(g) for g in range(len(groups))]
+
+        def body(carry, inputs):
+            x, caches = carry
+            lp, g_id, slot = inputs
+            x, caches = jax.lax.switch(g_id, branches, (x, caches, lp, slot))
+            return (x, caches), None
+
+        (x, caches), _ = jax.lax.scan(
+            body, (x, caches),
+            (params["layers"], jnp.asarray(gid), jnp.asarray(gslot)))
+        new_caches = {}
+        for g, (kg, vg) in enumerate(caches):
+            new_caches[f"k{g}"], new_caches[f"v{g}"] = kg, vg
+
+    new_state = {**new_caches, "pos": pos + adv}
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = _unembed(x, params, cfg)
     return logits.astype(jnp.float32), new_state
@@ -301,5 +372,6 @@ register_family(ModelFamily(
     decode_step=decode_step,
     prefill=prefill,
     supports_ragged=True,
+    cache_spec=cache_spec,
     pack_layouts=pack_layouts,
 ))

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .api import (ModelConfig, ModelFamily, ParamSpec, ragged_prologue,
+from .api import (ModelConfig, ModelFamily, ParamSpec, ring_prologue,
                   register_family)
 from .layers import (AttnParams, chunked_decode_attention, embed_lookup,
                      flash_attention, gelu_mlp, linear, qkv_project,
@@ -137,14 +137,29 @@ def apply(params, batch, cfg: ModelConfig):
     return logits.astype(jnp.float32)
 
 
-def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
+def cache_spec(cfg: ModelConfig, batch_size: int, kv_len: int,
+               slack: int = 0, windowed: bool = True):
+    """Decoder self-attention cache geometry through the shared grouped-
+    spec machinery (no bespoke layout): whisper's decoder is pure global
+    attention, so this is one full-length group over the Ld layers (MHA —
+    the head axis is ``heads``, not ``kv_heads``). The cross-attention KV
+    is admission-owned state, not part of the cache geometry."""
+    import numpy as np
+    from repro.serve.cache import build_cache_spec
+    return build_cache_spec(
+        np.zeros(cfg.n_layers, np.int32), batch_size, kv_len, slack=slack,
+        kv_heads=cfg.n_heads, head_dim=cfg.hd,
+        dtype=cfg.kv_dtype or cfg.dtype, windowed=windowed,
+        head_axis="heads")
+
+
+def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int,
+                       slack: int = 0, windowed: bool = True) -> dict:
     H, hd, Ld = cfg.n_heads, cfg.hd, cfg.n_layers
     cd = cfg.kv_dtype or cfg.dtype
     return {
-        "k": ParamSpec((Ld, batch_size, kv_len, H, hd),
-                       ("layers", "batch", "seq_kv", "heads", None), cd),
-        "v": ParamSpec((Ld, batch_size, kv_len, H, hd),
-                       ("layers", "batch", "seq_kv", "heads", None), cd),
+        # grouped self-attention KV (one global group: k0/v0)
+        **cache_spec(cfg, batch_size, kv_len, slack, windowed).state_specs(),
         # cross-attention KV, written per slot at admission (cross_prefill)
         "xk": ParamSpec((Ld, batch_size, cfg.enc_seq, H, hd),
                         ("layers", "batch", None, "heads", None), cd),
@@ -160,16 +175,17 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     new self-attention k/v at its own ``pos[b]`` and advances by
     ``t_valid[b]`` (T>1 = batched chunked prefill; padding rows land past
     the row's new pos and are rewritten before they become visible).
-    ``reset`` zeroes a slot's self-attention KV rows and position inside
-    the step; the cross-attention KV (``xk``/``xv``) is owned by
-    ``cross_prefill``, which overwrites the slot at admission — reset
-    leaves it alone so a just-prefilled slot is not clobbered."""
+    ``reset`` zeroes a slot's self-attention KV rows (the single global
+    cache group ``k0``/``v0``) and position inside the step; the
+    cross-attention KV (``xk``/``xv``) is owned by ``cross_prefill``,
+    which overwrites the slot at admission — reset leaves it alone so a
+    just-prefilled slot is not clobbered."""
     tokens = batch["tokens"]  # (B, T)
     B, T = tokens.shape
     dt = jnp.dtype(cfg.dtype)
     # cross KV (xk/xv) is deliberately NOT in the reset set — see docstring
-    pos, adv, _, st = ragged_prologue(state, batch, {"k": 1, "v": 1})
-    k_s, v_s = st["k"], st["v"]
+    pos, adv, _, st = ring_prologue(state, batch, 1)
+    k_s, v_s = st["k0"], st["v0"]
     x = embed_lookup(params["embed"], tokens, dtype=dt)
     positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
     # the whole encoder output is visible to every decoder position
@@ -199,7 +215,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
                                        state["xk"], state["xv"]))
     x = layer_norm(x, params["dec_norm"], cfg.norm_eps)
     logits = linear(x, params["embed"], "btd,vd->btv")  # tied, transposed
-    new_state = dict(state, k=k, v=v, pos=pos + adv)
+    new_state = dict(state, k0=k, v0=v, pos=pos + adv)
     return logits.astype(jnp.float32), new_state
 
 
@@ -262,5 +278,6 @@ register_family(ModelFamily(
     prefill=apply,
     supports_ragged=True,
     cross_prefill=cross_prefill,
+    cache_spec=cache_spec,
     pack_layouts=pack_layouts,
 ))

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .api import (ModelConfig, ModelFamily, ParamSpec, ragged_prologue,
+from .api import (ModelConfig, ModelFamily, ParamSpec, ring_prologue,
                   register_family)
 from .layers import (AttnParams, MlpParams, attn_block, causal_conv1d,
                      chunked_decode_attention, embed_lookup, linear,
@@ -244,11 +244,25 @@ def apply(params, batch, cfg: ModelConfig):
 
 # ------------------------------------------------------------------ decode
 
-def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
+def cache_spec(cfg: ModelConfig, batch_size: int, kv_len: int,
+               slack: int = 0, windowed: bool = True):
+    """Shared-attention cache geometry through the shared grouped-spec
+    machinery (no bespoke layout): the shared block is global attention,
+    applied at G points — one full-length group whose "layers" are the G
+    application points (stacked on the ``groups`` mesh axis)."""
+    G, _ = _groups(cfg)
+    from repro.serve.cache import build_cache_spec
+    return build_cache_spec(
+        np.zeros(G, np.int32), batch_size, kv_len, slack=slack,
+        kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+        dtype=cfg.kv_dtype or cfg.dtype, windowed=windowed,
+        layer_axis="groups")
+
+
+def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int,
+                       slack: int = 0, windowed: bool = True) -> dict:
     di, H, N = _dims(cfg)
     G, P = _groups(cfg)
-    K, hd = cfg.n_kv_heads, cfg.hd
-    cd = cfg.kv_dtype or cfg.dtype
     return {
         "conv": ParamSpec((G, P, batch_size, cfg.conv_kernel - 1, di + 2 * N),
                           ("groups", "layers", "batch", None, None),
@@ -256,11 +270,9 @@ def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int) -> dict:
         "ssm": ParamSpec((G, P, batch_size, H, SSM_HEAD_DIM, N),
                          ("groups", "layers", "batch", "heads", None, None),
                          "float32"),
-        # shared attention KV cache: one per application point (G of them)
-        "k": ParamSpec((G, batch_size, kv_len, K, hd),
-                       ("groups", "batch", "seq_kv", "kv_heads", None), cd),
-        "v": ParamSpec((G, batch_size, kv_len, K, hd),
-                       ("groups", "batch", "seq_kv", "kv_heads", None), cd),
+        # shared attention KV cache (grouped: the single global group
+        # k0/v0, one cache per application point — G of them)
+        **cache_spec(cfg, batch_size, kv_len, slack, windowed).state_specs(),
         "pos": ParamSpec((batch_size,), ("batch",), "int32"),
     }
 
@@ -275,9 +287,9 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     tokens = batch["tokens"]  # (B, T)
     B, T = tokens.shape
     dt_ = jnp.dtype(cfg.dtype)
-    pos, adv, valid, st = ragged_prologue(
-        state, batch, {"conv": 2, "ssm": 2, "k": 1, "v": 1})
-    conv_s, ssm_s, k_s, v_s = st["conv"], st["ssm"], st["k"], st["v"]
+    pos, adv, valid, st = ring_prologue(
+        state, batch, 1, extra_reset={"conv": 2, "ssm": 2})
+    conv_s, ssm_s, k_s, v_s = st["conv"], st["ssm"], st["k0"], st["v0"]
     x = embed_lookup(params["embed"], tokens, dtype=dt_)
     positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
     shared = params["shared"]
@@ -314,7 +326,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
         group_body, x, (params["mamba"], conv_s, ssm_s, k_s, v_s))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = linear(x, params["unembed"], "btd,dv->btv")
-    new_state = {"conv": conv, "ssm": ssm, "k": k, "v": v, "pos": pos + adv}
+    new_state = {"conv": conv, "ssm": ssm, "k0": k, "v0": v, "pos": pos + adv}
     return logits.astype(jnp.float32), new_state
 
 
@@ -365,5 +377,6 @@ register_family(ModelFamily(
     decode_step=decode_step,
     prefill=apply,
     supports_ragged=True,
+    cache_spec=cache_spec,
     pack_layouts=pack_layouts,
 ))

@@ -63,16 +63,41 @@ Components
     (``strict_admission=False`` admits them and flags the result
     ``Generation.truncated``).
 
+    Decode state is allocated from **grouped ring-buffer cache specs**
+    (``cache.CacheSpec``/``CacheGroup``): every attention-bearing family
+    declares its cache geometry as window-homogeneous layer groups
+    (``k{g}``/``v{g}`` state stacks), where global groups allocate the
+    full ``kv_len`` (+ chunk slack) and local (windowed) groups allocate
+    a **ring buffer** of only ``window + slack`` slots written at
+    ``pos % length``. Attention masks are rebuilt from reconstructed slot
+    positions (``cache.ring_positions``), so wrap-around, chunked prefill
+    crossing the wrap boundary, and slot reuse need no extra bookkeeping
+    — greedy tokens stay identical to the masked full-cache baseline
+    (``windowed_cache=False``, the layout kill-switch), and admission
+    still budgets ``prompt + max_new_tokens`` against the global-layer
+    length only (rings never overflow). On gemma3's 5:1 local:global
+    pattern this cuts resident cache ~6× at serving lengths (asymptote
+    26/4 layers; measured 0.23× uniform at the smoke benchmark's
+    kv_len=256).
+
     ``ServeEngine.weight_bytes()`` reports resident bytes broken out as
     codes / scales / codebooks / dense (comparable across architectures);
-    ``benchmarks/serve_packed.py`` measures tokens/s and weight bytes per
-    family (``--arch`` selects) and emits the machine-readable
-    ``BENCH_serve.json`` perf record with per-family resident ratios.
-    Measured (babsmax64:n4, packed vs the f32 master): paper-100m-small
-    0.133×, tied paper-100m 0.133× (embed packed, no dense unembed),
-    rwkv6 smoke 0.140×, whisper smoke 0.138×, qwen2-moe smoke 0.161× with
-    expert stacks packed — greedy tokens identical to the dense path in
-    every family.
+    ``ServeEngine.cache_bytes()`` reports the decode-cache side — per
+    cache group (windowed vs global) against the uniform full-length
+    baseline. ``benchmarks/serve_packed.py`` measures tokens/s, weight
+    bytes and cache bytes per family (``--arch`` selects) and emits the
+    machine-readable ``BENCH_serve.json`` perf record with per-family
+    resident ratios. Measured (babsmax64:n4, packed vs the f32 master):
+    paper-100m-small 0.133×, tied paper-100m 0.133× (embed packed, no
+    dense unembed), rwkv6 smoke 0.140×, whisper smoke 0.138×, qwen2-moe
+    smoke 0.161× with expert stacks packed, gemma3 smoke 0.146× weights
+    and 0.23× cache — greedy tokens identical to the dense path in every
+    family.
+
+``cache``
+    The decode-cache subsystem: ``CacheSpec``/``CacheGroup`` geometry,
+    ring-buffer index math (slot mapping + position reconstruction), and
+    ``cache_bytes()`` accounting with the uniform baseline.
 
 ``context_parallel``
     Flash-decode attention over a sequence-sharded KV cache (exact
@@ -86,8 +111,9 @@ The rest (the MoE router, formats with sparse outliers or tensor/channel
 scaling, tensors whose output dim does not tile by the block — e.g.
 zamba2's 548-wide in_proj in smoke) are dequantised at load.
 """
-from . import context_parallel, engine  # noqa: F401
+from . import cache, context_parallel, engine  # noqa: F401
+from .cache import CacheGroup, CacheSpec, build_cache_spec
 from .engine import Request, ServeEngine, greedy_generate
 
-__all__ = ["context_parallel", "engine", "Request", "ServeEngine",
-           "greedy_generate"]
+__all__ = ["cache", "context_parallel", "engine", "CacheGroup", "CacheSpec",
+           "build_cache_spec", "Request", "ServeEngine", "greedy_generate"]

@@ -1,0 +1,182 @@
+"""Decode-cache subsystem: per-layer-group KV specs with ring buffers.
+
+The flat ``(L, B, kv_len, K, hd)`` KV allocation wastes memory on
+local-attention layers: a layer with sliding window ``W`` only ever attends
+the last ``W`` keys, yet the uniform cache gives it the full ``kv_len``
+rows and masks the rest. With weights served packed (~0.133× the f32
+master), the KV cache dominates resident memory at serving batch sizes —
+so local layers here allocate a **ring buffer** of ``W + slack`` slots and
+write at ``pos % length``, while global layers keep the full length.
+
+``CacheGroup`` describes one window-homogeneous group of layers (same
+window ⇒ same allocated length ⇒ one stacked cache array); ``CacheSpec``
+is a model's full self-attention cache geometry and turns into state specs
+(``k{g}``/``v{g}`` per group, the grouped decode-state protocol of
+``repro.models.api``) and into byte accounting (``cache_bytes``, with the
+uniform allocation as the baseline so the rolling-window saving is a
+measured number).
+
+Ring-buffer correctness (the helpers below are the single source of the
+index math — ``models.layers`` reconstructs positions the same way):
+
+* slot for absolute position ``p`` is ``p % length`` (:func:`ring_slots`);
+* given the highest position written so far ``last``, slot ``s`` holds
+  position ``last - ((last - s) % length)`` — the most recent position
+  ≤ ``last`` congruent to ``s``; a negative value means the slot was never
+  written (:func:`ring_positions`). Attention masks are built from these
+  reconstructed positions, so wrap-around needs no extra bookkeeping.
+* chunked prefill may write up to ``chunk`` tokens past a row's valid
+  prefix (ragged padding), and those writes overwrite the oldest ring
+  slots. ``length ≥ window + chunk - 1`` guarantees everything clobbered
+  is already outside every reachable query's window — the engine passes
+  ``slack = prefill_chunk``, satisfying it with a slot to spare.
+
+The same geometry with ``windowed=False`` allocates every group at the
+full length: the masked-full-cache baseline the ring path must match
+bit-for-bit on greedy tokens (and the pre-ring layout, kept as a
+kill-switch via ``ServeEngine(windowed_cache=False)``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def layer_groups(windows) -> Tuple[Tuple[int, Tuple[int, ...]], ...]:
+    """Group a per-layer window pattern into window-homogeneous cache
+    groups. ``windows``: (L,) ints, 0 = global attention. Returns
+    ``((window, layer_indices), ...)`` ordered by first appearance, so
+    group ``g`` owns state keys ``k{g}``/``v{g}`` deterministically."""
+    order: List[int] = []
+    members: Dict[int, List[int]] = {}
+    for i, w in enumerate(int(w) for w in np.asarray(windows).reshape(-1)):
+        if w not in members:
+            members[w] = []
+            order.append(w)
+        members[w].append(i)
+    return tuple((w, tuple(members[w])) for w in order)
+
+
+@dataclass(frozen=True)
+class CacheGroup:
+    """One window-homogeneous layer group's KV cache geometry."""
+    index: int                # group id == suffix of the state keys
+    window: int               # sliding-window size; 0 = global attention
+    layers: Tuple[int, ...]   # absolute layer indices in stack order
+    length: int               # allocated kv slots per layer
+
+    @property
+    def ring(self) -> bool:
+        """Windowed groups write at ``pos % length`` (ring buffer)."""
+        return self.window > 0
+
+    @property
+    def k_key(self) -> str:
+        return f"k{self.index}"
+
+    @property
+    def v_key(self) -> str:
+        return f"v{self.index}"
+
+
+@dataclass(frozen=True)
+class CacheSpec:
+    """A model's full self-attention decode-cache geometry.
+
+    ``full_length`` is what a uniform (pre-ring) allocation would give
+    every layer (``kv_len + slack``) — the baseline of the byte
+    accounting. ``layer_axis``/``head_axis`` name the logical mesh axes of
+    the stacked lead dim and the head dim (families differ: transformer
+    stacks ``layers`` × ``kv_heads``, whisper ``layers`` × ``heads``,
+    zamba2 stacks its shared block's ``groups`` application points)."""
+    groups: Tuple[CacheGroup, ...]
+    batch: int
+    kv_heads: int
+    head_dim: int
+    dtype: str
+    full_length: int
+    layer_axis: str = "layers"
+    head_axis: str = "kv_heads"
+
+    def state_specs(self) -> dict:
+        """``{k{g}: ParamSpec, v{g}: ParamSpec}`` per group — the grouped
+        decode-state entries (``pos`` and any non-KV state stay with the
+        family)."""
+        from repro.models.api import ParamSpec
+        specs = {}
+        for g in self.groups:
+            shape = (len(g.layers), self.batch, g.length, self.kv_heads,
+                     self.head_dim)
+            axes = (self.layer_axis, "batch", "seq_kv", self.head_axis, None)
+            specs[g.k_key] = ParamSpec(shape, axes, self.dtype)
+            specs[g.v_key] = ParamSpec(shape, axes, self.dtype)
+        return specs
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(g.layers) for g in self.groups)
+
+    def cache_bytes(self) -> dict:
+        """Byte accounting: per-group breakdown, grouped total (``kv``),
+        and the uniform full-length baseline (``uniform_kv``) the rolling
+        window is saving against."""
+        item = jnp.dtype(self.dtype).itemsize
+        row = 2 * self.batch * self.kv_heads * self.head_dim * item  # k + v
+        per = []
+        kv = 0
+        for g in self.groups:
+            b = row * len(g.layers) * g.length
+            per.append({"window": g.window, "n_layers": len(g.layers),
+                        "length": g.length, "bytes": b})
+            kv += b
+        uniform = row * self.n_layers * self.full_length
+        return {"kv": kv, "uniform_kv": uniform,
+                "cache_ratio_vs_uniform": round(kv / uniform, 4) if uniform
+                else 1.0,
+                "cache_groups": per}
+
+
+def build_cache_spec(windows, batch: int, kv_len: int, *, slack: int = 0,
+                     kv_heads: int, head_dim: int, dtype: str,
+                     windowed: bool = True, layer_axis: str = "layers",
+                     head_axis: str = "kv_heads") -> CacheSpec:
+    """Build a model's grouped cache geometry from its per-layer window
+    pattern. Global groups (and every group when ``windowed=False`` — the
+    masked-full-cache baseline) allocate ``kv_len + slack``; windowed
+    groups allocate ``min(window, kv_len) + slack`` ring slots. ``slack``
+    is the engine's chunk-write spill region (``prefill_chunk``): global
+    caches never see a write past it, and it keeps ring clobbering outside
+    every window (``length ≥ window + chunk - 1``)."""
+    full = kv_len + slack
+    groups = []
+    for i, (w, layers) in enumerate(layer_groups(windows)):
+        length = min(w, kv_len) + slack if (windowed and w > 0) else full
+        groups.append(CacheGroup(index=i, window=w, layers=layers,
+                                 length=length))
+    return CacheSpec(tuple(groups), batch, kv_heads, head_dim, dtype, full,
+                     layer_axis, head_axis)
+
+
+# ---------------------------------------------------------------------------
+# Ring index math (shared with models.layers — keep in sync by using these)
+# ---------------------------------------------------------------------------
+
+def ring_slots(positions, length: int):
+    """Ring slot for each absolute position. Linear caches are the
+    degenerate case where positions never reach ``length``."""
+    return positions % length
+
+def ring_positions(last, length: int):
+    """Reconstruct the absolute position each ring slot currently holds.
+
+    ``last``: (...,) the highest position written so far per row. Returns
+    (..., length): slot ``s`` holds the most recent position ≤ ``last``
+    congruent to ``s`` mod ``length``; negative ⇒ never written. Content-
+    agnostic — masks built from these positions (causal, window, ≥ 0) are
+    wrap-correct with no per-slot bookkeeping."""
+    last = jnp.asarray(last)
+    s = jnp.arange(length, dtype=last.dtype)
+    return last[..., None] - ((last[..., None] - s) % length)

@@ -64,15 +64,28 @@ class ServeEngine:
     Weights may be held packed (``from_quantised``) so the hot loop reads
     the quantised stream the kernel dequantises on the fly.
 
+    Decode state is allocated from the family's **grouped cache specs**
+    (``serve.cache``): one ``k{g}``/``v{g}`` stack per window-homogeneous
+    layer group — global groups at the full ``kv_len`` (+ chunk slack),
+    local (windowed) groups as ring buffers of only ``window + slack``
+    slots written at ``pos % length`` (~6× less resident cache on gemma3's
+    5:1 local:global pattern at serving lengths). ``windowed_cache=False``
+    is the masked-full-cache baseline/kill-switch: same grouped layout,
+    every group allocated at full length.
+
     ``strict_admission`` (default True): reject requests whose
     ``prompt + max_new_tokens`` cannot fit the KV budget at ``submit`` time.
-    With ``strict_admission=False`` such requests are admitted and end
-    early with ``Generation.truncated`` set instead.
+    The budget is ``kv_len`` — the **global-layer** cache length: ring
+    groups wrap and can never overflow, so only the full-length global
+    caches (and the position range) constrain admission, and the budget is
+    identical with or without the windowed allocation. With
+    ``strict_admission=False`` such requests are admitted and end early
+    with ``Generation.truncated`` set instead.
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
                  kv_len: int = 256, prefill_chunk: int = 8,
-                 strict_admission: bool = True):
+                 strict_admission: bool = True, windowed_cache: bool = True):
         self.cfg = cfg
         self.fam = get_family(cfg.family)
         if not getattr(self.fam, "supports_ragged", False):
@@ -86,10 +99,7 @@ class ServeEngine:
         self.kv_len = kv_len
         self.prefill_chunk = max(1, prefill_chunk)
         self.strict_admission = strict_admission
-        # chunk writes may spill past a slot's final position; a
-        # `prefill_chunk` slack region keeps them off valid cache rows
-        # (they are never visible: positions ≥ kv_len are never attended)
-        self._cache_len = kv_len + self.prefill_chunk
+        self.windowed_cache = windowed_cache
         self._state = self._zero_state()
         self._slots: List[Optional[Generation]] = [None] * batch_slots
         self._queue: List[Request] = []
@@ -103,6 +113,7 @@ class ServeEngine:
         self._cross_prefill = (jax.jit(
             lambda p, f: self.fam.cross_prefill(p, f, self.cfg))
             if self.fam.cross_prefill is not None else None)
+        self._zero_cross = None   # lazy text-only cross-KV template
 
     @classmethod
     def from_quantised(cls, cfg: ModelConfig, qparams, plan,
@@ -134,7 +145,13 @@ class ServeEngine:
 
     # ----------------------------------------------------------------- state
     def _zero_state(self):
-        specs = self.fam.decode_state_specs(self.cfg, self.B, self._cache_len)
+        # slack = prefill_chunk: chunk writes may spill past a slot's final
+        # position (never visible — positions ≥ kv_len are never attended),
+        # and it keeps ring-buffer clobbering outside every window
+        # (ring length ≥ window + chunk - 1; see serve.cache)
+        specs = self.fam.decode_state_specs(
+            self.cfg, self.B, self.kv_len, slack=self.prefill_chunk,
+            windowed=self.windowed_cache)
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
                             is_leaf=lambda x: isinstance(x, ParamSpec))
 
@@ -160,13 +177,46 @@ class ServeEngine:
                 "codes": codes, "scales": scales, "codebooks": codebooks,
                 "family": self.cfg.family}
 
+    def cache_bytes(self) -> dict:
+        """Resident decode-state bytes — the term that dominates memory at
+        serving batch sizes once weights are packed. ``kv`` /
+        ``uniform_kv`` / ``cache_groups`` come from the family's declared
+        cache geometry (``ModelFamily.cache_spec``): the grouped
+        allocation vs the flat pre-ring full-length baseline, so
+        ``cache_ratio_vs_uniform`` is the measured rolling-window saving.
+        ``other`` is the non-KV decode state (recurrent/conv/ssm state,
+        whisper's cross-attention KV, positions); ``total`` sums the
+        actual allocated state tree."""
+        total = int(sum(int(l.size) * l.dtype.itemsize
+                        for l in jax.tree.leaves(self._state)))
+        out = {"total": total, "family": self.cfg.family}
+        if self.fam.cache_spec is not None:
+            spec = self.fam.cache_spec(
+                self.cfg, self.B, self.kv_len, slack=self.prefill_chunk,
+                windowed=self.windowed_cache)
+            cb = spec.cache_bytes()
+            out.update(cb)
+            out["other"] = total - cb["kv"]
+        else:
+            out.update({"kv": 0, "uniform_kv": 0,
+                        "cache_ratio_vs_uniform": 1.0, "cache_groups": [],
+                        "other": total})
+        return out
+
     # ------------------------------------------------------------------- api
     def submit(self, req: Request):
         """Queue a request. The prompt must always fit the KV budget; with
         ``strict_admission`` (default) the whole generation must too —
         ``prompt + max_new_tokens > kv_len`` raises instead of silently
         truncating mid-decode. Non-strict engines admit such requests and
-        mark the resulting :class:`Generation` ``truncated``."""
+        mark the resulting :class:`Generation` ``truncated``.
+
+        ``kv_len`` budgets the **global-layer** cache length (and the
+        position range) only: windowed layer groups are ring buffers that
+        wrap at ``pos % length`` and can never overflow, so their (much
+        smaller) allocation never constrains admission — a request that
+        fits the global caches is admissible regardless of how far past
+        any local window it runs."""
         if len(req.prompt) >= self.kv_len:
             raise ValueError(
                 f"request rid={req.rid}: prompt length {len(req.prompt)} "
@@ -255,7 +305,12 @@ class ServeEngine:
             frames = jnp.asarray(req.frames)[None]      # (1, enc_seq, D)
             entries = self._cross_prefill(self.params, frames)
         else:
-            entries = self.fam.cross_prefill(self.params, None, self.cfg)
+            # the text-only wipe is a constant zero template per engine —
+            # build it once, not per admission
+            if self._zero_cross is None:
+                self._zero_cross = self.fam.cross_prefill(self.params, None,
+                                                          self.cfg)
+            entries = self._zero_cross
         for key, val in entries.items():
             self._state[key] = self._state[key].at[:, i].set(val[:, 0])
 
@@ -268,8 +323,11 @@ class ServeEngine:
             p /= p.sum()
             # seed from (rid, index): decoupled across slots — one stream
             # per request, reproducible for a given rid regardless of which
-            # slot or wave it lands in
-            rng = np.random.default_rng((req.rid, len(g.tokens)))
+            # slot or wave it lands in. Masked to uint32: SeedSequence
+            # rejects negative entries, and rid<0 is a valid id (the
+            # benchmarks use rid=-1 for warmup requests)
+            rng = np.random.default_rng((req.rid & 0xFFFFFFFF,
+                                         len(g.tokens)))
             tok = int(rng.choice(len(p), p=p))
         else:
             tok = int(np.argmax(logits_row))

@@ -124,9 +124,10 @@ class TestPackedServing:
         fam = mapi.get_family(CFG.family)
         packed = plan.pack_quantised(qparams, fam.pack_layouts(CFG))
         dense = plan.dequantise(qparams)
+        # grouped decode-state protocol: pure-global = one group k0/v0
         state = {
-            "k": jnp.zeros((CFG.n_layers, 1, 16, CFG.n_kv_heads, CFG.hd)),
-            "v": jnp.zeros((CFG.n_layers, 1, 16, CFG.n_kv_heads, CFG.hd)),
+            "k0": jnp.zeros((CFG.n_layers, 1, 16, CFG.n_kv_heads, CFG.hd)),
+            "v0": jnp.zeros((CFG.n_layers, 1, 16, CFG.n_kv_heads, CFG.hd)),
             "pos": jnp.zeros((1,), jnp.int32),
         }
         batch = {"tokens": jnp.asarray([[7]], jnp.int32)}

@@ -1,0 +1,274 @@
+"""Ring-buffer decode-cache tests: grouped per-layer-group KV specs with
+rolling windows for local attention (gemma3's 5:1 local:global pattern).
+
+The invariant under test: a windowed layer group allocating only
+``window + prefill_chunk`` ring slots (written at ``pos % length``, masked
+via wrap-correct reconstructed positions) generates **exactly** the same
+greedy tokens as the masked full-cache baseline (``windowed_cache=False``:
+same grouped layout, every group at full length — the pre-ring
+behaviour) — across slot reuse, prefill chunks crossing the wrap boundary,
+and generations that lap the ring multiple times. Plus the accounting
+(``cache_bytes``: the ~6× saving is computed, and measured ≤ 1/4 at smoke
+serving lengths) and admission (the KV budget is the global-layer length;
+rings never overflow)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api as mapi
+from repro.serve.cache import build_cache_spec, layer_groups, ring_positions
+from repro.serve.engine import Request, ServeEngine, greedy_generate
+
+GCFG = configs.get_config("gemma3-1b", "smoke").replace(
+    dtype="float32", param_dtype="float32")   # window=16, pattern (5, 1)
+
+
+def _params(cfg, seed=0):
+    return mapi.get_family(cfg.family).init(jax.random.PRNGKey(seed), cfg)
+
+
+def _run(eng, reqs):
+    for rid, (p, n) in reqs.items():
+        eng.submit(Request(prompt=list(p), max_new_tokens=n, rid=rid))
+    return {g.rid: g.tokens for g in eng.run()}
+
+
+class TestGemma3RingParity:
+    """Ring cache == masked full cache, greedy-token-identical."""
+
+    def test_ring_matches_full_cache_baseline(self):
+        """Ragged prompts, generations lapping the ring (window=16, ring
+        length 20, positions reach ~34): tokens identical to the
+        full-length masked baseline for every request."""
+        params = _params(GCFG)
+        kw = dict(batch_slots=2, kv_len=48, prefill_chunk=4)
+        reqs = {0: ([5, 9, 3, 7, 2, 8, 1, 6, 4, 3], 24), 1: ([11, 4], 24)}
+        ring = _run(ServeEngine(GCFG, params, **kw), reqs)
+        full = _run(ServeEngine(GCFG, params, windowed_cache=False, **kw),
+                    reqs)
+        assert set(ring) == set(reqs)
+        assert ring == full
+
+    def test_ring_matches_forward_argmax(self):
+        """greedy_generate (ring allocation, T=1 decode) == iterative
+        teacher-forcing argmax — ties the ring decode path to the windowed
+        flash-attention forward, not just to another cache layout."""
+        params = _params(GCFG, seed=1)
+        fam = mapi.get_family(GCFG.family)
+        prompt = np.asarray([[5, 9, 3, 7, 2, 8, 1, 6]], np.int32)
+        n_new = 20  # positions reach 27 > ring length 16: wraps
+        gen = greedy_generate(GCFG, params, prompt, n_new=n_new, kv_len=64)
+        toks = prompt.copy()
+        for _ in range(n_new):
+            logits = fam.apply(params, {"tokens": jnp.asarray(toks)}, GCFG)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))[:, None]
+            toks = np.concatenate([toks, nxt], 1)
+        np.testing.assert_array_equal(gen, toks[:, prompt.shape[1]:])
+
+    def test_slot_reuse_after_wrap(self):
+        """A slot whose previous occupant lapped the ring must serve the
+        next request exactly like a fresh engine (regression: stale ring
+        rows surviving the reset/reconstruction masks)."""
+        params = _params(GCFG)
+        kw = dict(batch_slots=1, kv_len=48, prefill_chunk=4)
+        eng = ServeEngine(GCFG, params, **kw)
+        done = _run(eng, {0: ([5, 9, 3, 7, 2], 24),   # wraps the 20-slot ring
+                          1: ([11, 4, 6], 8)})        # reuses the slot
+        fresh = ServeEngine(GCFG, params, **kw)
+        ref = _run(fresh, {1: ([11, 4, 6], 8)})
+        assert done[1] == ref[1], "reused slot leaked ring state"
+
+    def test_chunked_prefill_crossing_wrap(self):
+        """A prefill chunk that straddles the wrap boundary (prompt 30
+        tokens, chunk 5, ring length 21: the chunk at positions 20..24
+        writes slots 20,0,1,2,3) must not change any token vs
+        token-by-token prefill or the full-cache baseline."""
+        params = _params(GCFG)
+        prompt = list(np.arange(30) % GCFG.vocab)
+        outs = {}
+        for tag, kw in [
+                ("chunk5", dict(prefill_chunk=5)),
+                ("chunk1", dict(prefill_chunk=1)),
+                ("full", dict(prefill_chunk=5, windowed_cache=False))]:
+            eng = ServeEngine(GCFG, params, batch_slots=2, kv_len=48, **kw)
+            outs[tag] = _run(eng, {0: (prompt, 8), 1: ([7, 7, 2], 8)})
+        assert outs["chunk5"] == outs["chunk1"] == outs["full"]
+
+    def test_packed_serving_rides_ring(self):
+        """Packed quantised weights and the ring cache compose: packed
+        ring engine == dequantised-dense ring engine, greedy tokens."""
+        from repro.core import build_plan
+        params = _params(GCFG)
+        plan = build_plan(params, "babsmax32:n4")
+        qparams = plan.quantise(params)
+        kw = dict(batch_slots=2, kv_len=48, prefill_chunk=4)
+        reqs = {0: ([5, 9, 3, 7, 2], 20), 1: ([11, 4], 20)}
+        a = _run(ServeEngine.from_quantised(GCFG, qparams, plan, **kw), reqs)
+        b = _run(ServeEngine.from_quantised(GCFG, qparams, plan,
+                                            packed=False, **kw), reqs)
+        assert a == b
+
+
+class TestRingAdmission:
+    """The KV budget is the global-layer cache length; ring groups wrap
+    and never overflow, so the budget is identical with or without the
+    windowed allocation."""
+
+    def test_budget_against_global_length_only(self):
+        params = _params(GCFG)
+        eng = ServeEngine(GCFG, params, batch_slots=1, kv_len=32,
+                          prefill_chunk=4)
+        # over the global budget: rejected at submit
+        with pytest.raises(ValueError, match="KV budget"):
+            eng.submit(Request(prompt=[1] * 8, max_new_tokens=32, rid=0))
+        # exactly filling the global budget is admitted and completes
+        # untruncated even though the ring groups hold only 20 slots
+        eng.submit(Request(prompt=[1] * 8, max_new_tokens=24, rid=1))
+        g = eng.run()[0]
+        assert len(g.tokens) == 24 and not g.truncated
+        # and those tokens match the full-cache baseline
+        full = ServeEngine(GCFG, params, batch_slots=1, kv_len=32,
+                           prefill_chunk=4, windowed_cache=False)
+        full.submit(Request(prompt=[1] * 8, max_new_tokens=24, rid=1))
+        assert g.tokens == full.run()[0].tokens
+
+    def test_relaxed_truncation_unchanged(self):
+        """strict_admission=False semantics are untouched by the ring:
+        over-budget generations truncate at the global length."""
+        params = _params(GCFG)
+        eng = ServeEngine(GCFG, params, batch_slots=1, kv_len=24,
+                          prefill_chunk=4, strict_admission=False)
+        eng.submit(Request(prompt=[1] * 8, max_new_tokens=32, rid=0))
+        g = eng.run()[0]
+        assert g.truncated and 0 < len(g.tokens) < 32
+
+
+class TestCacheBytes:
+    def test_five_to_one_pattern_saving(self):
+        """The accounting behind the ROADMAP claim: gemma3's full 5:1
+        pattern (26 layers, window 512 — 22 local, 4 global) at a 32k
+        serving length keeps ~1/6 of the uniform allocation."""
+        full = configs.get_config("gemma3-1b", "full")
+        spec = build_cache_spec(
+            full.window_pattern(), 8, 32768, slack=16,
+            kv_heads=full.n_kv_heads, head_dim=full.hd, dtype="bfloat16")
+        cb = spec.cache_bytes()
+        saving = cb["uniform_kv"] / cb["kv"]
+        assert saving >= 5.5, cb
+        groups = {g["window"]: g for g in cb["cache_groups"]}
+        assert groups[512]["n_layers"] == 22 and groups[0]["n_layers"] == 4
+        assert groups[512]["length"] == 512 + 16
+
+    def test_smoke_engine_ratio_vs_uniform(self):
+        """Measured on a live engine: ≤ 1/4 of the uniform allocation at
+        kv_len=256 (the benchmark's configuration), exactly 1.0 with the
+        ring disabled."""
+        params = _params(GCFG)
+        eng = ServeEngine(GCFG, params, batch_slots=2, kv_len=256,
+                          prefill_chunk=4)
+        cb = eng.cache_bytes()
+        assert cb["kv"] <= 0.25 * cb["uniform_kv"], cb
+        # total allocated state == grouped kv + pos
+        assert cb["total"] == cb["kv"] + cb["other"]
+        full = ServeEngine(GCFG, params, batch_slots=2, kv_len=256,
+                           prefill_chunk=4, windowed_cache=False)
+        assert full.cache_bytes()["kv"] == full.cache_bytes()["uniform_kv"]
+
+    def test_pure_global_families_unchanged(self):
+        """Families with no windowed layers allocate exactly the uniform
+        bytes (ratio 1.0) — the ring subsystem is a no-op for them."""
+        for arch in ("paper-100m", "zamba2-2.7b", "whisper-large-v3"):
+            cfg = configs.get_config(arch, "smoke").replace(
+                dtype="float32", param_dtype="float32")
+            fam = mapi.get_family(cfg.family)
+            spec = fam.cache_spec(cfg, 2, 32, slack=4)
+            cb = spec.cache_bytes()
+            assert cb["kv"] == cb["uniform_kv"], arch
+            assert cb["cache_ratio_vs_uniform"] == 1.0, arch
+
+    def test_recurrent_family_reports_no_kv(self):
+        cfg = configs.get_config("rwkv6-1.6b", "smoke").replace(
+            dtype="float32", param_dtype="float32")
+        eng = ServeEngine(cfg, _params(cfg), batch_slots=1, kv_len=16)
+        cb = eng.cache_bytes()
+        assert cb["kv"] == 0 and cb["other"] == cb["total"] > 0
+
+
+class TestRingPrimitives:
+    """The index math, against explicit full-cache references."""
+
+    def test_layer_groups_pattern(self):
+        assert layer_groups(GCFG.window_pattern()) == (
+            (16, (0, 1, 2, 3, 4)), (0, (5,)))
+        assert layer_groups(np.zeros(3, np.int32)) == ((0, (0, 1, 2)),)
+
+    def test_ring_positions_reconstruction(self):
+        R = 8
+        # after writing positions 0..10, slot s holds the most recent
+        # position ≤ 10 congruent to s mod 8
+        got = np.asarray(ring_positions(jnp.asarray([10]), R))[0]
+        np.testing.assert_array_equal(got, [8, 9, 10, 3, 4, 5, 6, 7])
+        # before any wrap, written slots reconstruct to themselves and
+        # unwritten slots go negative
+        got = np.asarray(ring_positions(jnp.asarray([2]), R))[0]
+        np.testing.assert_array_equal(got, [0, 1, 2, -5, -4, -3, -2, -1])
+
+    def test_chunked_ring_attention_matches_masked_full(self):
+        """Ring-reconstructed masks == explicit full-cache window masks,
+        for per-row positions with and without wrap."""
+        from repro.models.layers import chunked_decode_attention
+        rng = np.random.default_rng(0)
+        B, T, H, K, hd, W, S = 2, 4, 4, 2, 8, 6, 32
+        R = W + T  # ring length ≥ window + chunk - 1
+        pos = np.asarray([3, 17])  # row 0 pre-wrap, row 1 wrapped twice
+        kf = rng.standard_normal((B, S, K, hd)).astype(np.float32)
+        vf = rng.standard_normal((B, S, K, hd)).astype(np.float32)
+        kr = np.zeros((B, R, K, hd), np.float32)
+        vr = np.zeros((B, R, K, hd), np.float32)
+        for b in range(B):
+            for p in range(pos[b] + T):   # replay every write into the ring
+                kr[b, p % R] = kf[b, p]
+                vr[b, p % R] = vf[b, p]
+        q = rng.standard_normal((B, T, H, hd)).astype(np.float32)
+        qpos = jnp.asarray(pos)[:, None] + jnp.arange(T)[None, :]
+        out_full = chunked_decode_attention(
+            jnp.asarray(q), jnp.asarray(kf), jnp.asarray(vf), qpos, window=W)
+        out_ring = chunked_decode_attention(
+            jnp.asarray(q), jnp.asarray(kr), jnp.asarray(vr), qpos, window=W,
+            ring=True)
+        np.testing.assert_allclose(np.asarray(out_ring),
+                                   np.asarray(out_full), rtol=2e-6, atol=2e-6)
+
+    def test_single_token_ring_attention_matches_masked_full(self):
+        from repro.models.layers import decode_attention
+        rng = np.random.default_rng(1)
+        B, H, hd, W, S = 1, 2, 8, 4, 24
+        R = W + 1
+        p = 13  # wrapped
+        kf = rng.standard_normal((B, S, H, hd)).astype(np.float32)
+        vf = rng.standard_normal((B, S, H, hd)).astype(np.float32)
+        kr = np.zeros((B, R, H, hd), np.float32)
+        vr = np.zeros((B, R, H, hd), np.float32)
+        for q_ in range(p + 1):
+            kr[0, q_ % R] = kf[0, q_]
+            vr[0, q_ % R] = vf[0, q_]
+        q = rng.standard_normal((B, 1, H, hd)).astype(np.float32)
+        out_full = decode_attention(jnp.asarray(q), jnp.asarray(kf),
+                                    jnp.asarray(vf), p, window=W)
+        out_ring = decode_attention(jnp.asarray(q), jnp.asarray(kr),
+                                    jnp.asarray(vr), p, window=W, ring=True)
+        np.testing.assert_allclose(np.asarray(out_ring),
+                                   np.asarray(out_full), rtol=2e-6, atol=2e-6)
+
+    def test_update_kv_cache_ring_wraps(self):
+        from repro.models.layers import update_kv_cache
+        R, T = 5, 3
+        cache = jnp.zeros((1, R, 1, 1))
+        new = jnp.asarray(np.arange(1, T + 1, dtype=np.float32)
+                          .reshape(1, T, 1, 1))
+        out = update_kv_cache(cache, new, jnp.asarray([4]), ring=True)
+        # positions 4,5,6 -> slots 4,0,1
+        np.testing.assert_array_equal(
+            np.asarray(out).reshape(-1), [2, 3, 0, 0, 1])
