@@ -8,6 +8,16 @@ three roofline terms from the compiled dry-run artifacts:
 plus MODEL_FLOPS/HLO_FLOPs (useful-compute fraction; catches remat and
 dispatch waste) and the dominant bottleneck. Reads results/dryrun/*.json
 (produced by repro.launch.dryrun); writes a markdown table + json.
+
+The **dequant section** extends the model to the packed serving hot path:
+for each decode matmul shape of the serve bench (the paper-100m full
+config's five projections, per batch size), it renders the dequant terms
+from the kernel's own tuning model (``kernels.dequant_matmul.tune``) —
+packed code bytes, dequant flops and time for the tile shape + strategy
+``choose_tiles`` actually picks — next to the dense-weight stream those
+bytes replace. Tile/strategy choices are thereby guided by the same
+analytic terms this table makes inspectable, not guessed: if a choice
+looks wrong here, ``tune.register`` overrides it per geometry.
 """
 from __future__ import annotations
 
@@ -105,6 +115,76 @@ def check(rows):
     return fails
 
 
+# ------------------------------------------------------------------ dequant
+
+def serve_shapes(batches=(1, 2, 4, 8)):
+    """The serve bench's decode matmul shapes: (tag, M, K, N) for every
+    projection of the paper-100m full config, per swept batch size (M =
+    batch slots at decode — one valid token per slot)."""
+    from repro import configs
+    cfg = configs.get_config("paper-100m", "full")
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    kv = cfg.n_kv_heads * cfg.head_dim
+    projs = [("wq", d, cfg.n_heads * cfg.head_dim), ("wk", d, kv),
+             ("wv", d, kv), ("wo", cfg.n_heads * cfg.head_dim, d),
+             ("w_gate", d, ff), ("w_up", d, ff), ("w_down", ff, d),
+             ("unembed", d, v)]
+    return [(f"{tag}/b{M}", M, K, N)
+            for M in batches for tag, K, N in projs]
+
+
+def dequant_rows(batches=(1, 2, 4, 8), bits=4, n_codes=16, block=64):
+    """Dequant roofline per serve-bench shape: the tuning table's chosen
+    tiles/strategy with its own cost terms, against the dense f32 stream.
+    ``block=64`` matches the serve bench's ``babsmax64:n4`` format."""
+    from repro.kernels.dequant_matmul import tune
+    rows = []
+    for tag, M, K, N in serve_shapes(batches):
+        c = tune.choose_tiles(M, K, N, bits, n_codes=n_codes, block=block)
+        est = tune.estimate(M, K, N, bits, c.tm, c.tk, c.tn, n_codes,
+                            c.decode, block)
+        dense_bytes = 4 * K * N          # the f32 master stream replaced
+        rows.append(dict(
+            shape=tag, M=M, K=K, N=N, bits=bits,
+            tiles=f"{c.tm}x{c.tk}x{c.tn}",
+            strategy="decode" if c.decode else "lut",
+            code_bytes=est["code_bytes"],
+            dequant_flops=est["dequant_flops"],
+            dequant_time_s=est["dequant_time"],
+            time_s=est["time"],
+            dense_bytes=dense_bytes,
+            stream_cut=round(dense_bytes / est["code_bytes"], 2),
+        ))
+    return rows
+
+
+def dequant_markdown(rows) -> str:
+    hdr = ("| shape | M×K×N | tiles | strategy | code bytes | dequant s | "
+           "total s | stream cut |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['shape']} | {r['M']}×{r['K']}×{r['N']} | {r['tiles']} | "
+            f"{r['strategy']} | {r['code_bytes']} | "
+            f"{r['dequant_time_s']:.3g} | {r['time_s']:.3g} | "
+            f"{r['stream_cut']}× |")
+    return "\n".join(lines)
+
+
+def run_dequant():
+    rows = dequant_rows()
+    os.makedirs("results/bench", exist_ok=True)
+    with open("results/bench/roofline_dequant.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
 if __name__ == "__main__":
-    rows = run()
-    print(markdown_table(rows))
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dequant", action="store_true",
+                    help="print only the packed-serving dequant table")
+    args = ap.parse_args()
+    if not args.dequant:
+        print(markdown_table(run()))
+    print(dequant_markdown(run_dequant()))

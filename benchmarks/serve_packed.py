@@ -27,12 +27,31 @@ per path (prompt chunks of ``prefill_chunk`` tokens — recorded per row).
 On CPU the jnp oracle runs instead of the Pallas kernel, so tokens/s
 validates the plumbing; the bandwidth win is realised on TPU.
 
+Timing is **interleaved**: both engines of a pair are warmed (jit traces +
+an untimed full rep so page faults and allocator growth are paid off the
+clock), then timed reps alternate f32/packed/f32/packed and the per-engine
+median is reported — sequential timing hands whichever engine runs first
+the cold-page bill and can bias the ratio either way.
+
+The module also runs the **decode batch sweep** (the paper's speed claim,
+not just the size claim): the full-size paper-100m config at batch sizes
+1–8, recording the packed-vs-dense tokens/s ratio per batch size. The full
+config is the point — its f32 weights (~504 MB) stream from memory while
+the 4-bit code stream (~63 MB) stays cache-resident, which is exactly the
+regime the paper's bandwidth argument describes; the small/smoke configs
+are entirely cache-resident either way and cannot show the effect. The
+sweep feeds ``check()``: packed < f32 tokens/s at **any** swept batch size
+is a failure, as is any greedy-token divergence from the dense path.
+
 Besides the usual results/bench row dump, this module writes the
 machine-readable ``BENCH_serve.json`` (tokens/s + resident weight bytes +
-per-family resident ratios) so the serving perf trajectory can be tracked
-across PRs. Run directly with ``--arch`` to restrict coverage:
+per-family resident ratios + the per-batch sweep ratios) so the serving
+perf trajectory can be tracked across PRs. Run directly with ``--arch`` to
+restrict coverage, or ``--sweep-only`` for just the batch sweep (the
+``run_tests.sh --bench-smoke`` target):
 
     PYTHONPATH=src python -m benchmarks.serve_packed --arch rwkv6,whisper
+    PYTHONPATH=src python -m benchmarks.serve_packed --sweep-only
 """
 from __future__ import annotations
 
@@ -57,7 +76,15 @@ ZAMBA_FMT = "babsmax32:n4"  # zamba2 smoke: out_proj/shared tile by 32
 GEMMA_FMT = "babsmax32:n4"  # gemma3 smoke: d_model=64 / hd=32 tile by 32
 N_REQ = 6
 MAX_NEW = 24
+FAMILY_REPS = 2             # interleaved timed reps per family-row engine
 BENCH_SERVE_OUT = os.environ.get("REPRO_BENCH_SERVE_OUT", "BENCH_serve.json")
+
+# decode batch sweep: full-size paper-100m per batch size (see module doc)
+SWEEP_BATCHES = (1, 2, 4, 8)
+SWEEP_REPS = 4
+SWEEP_NEW = 12
+SWEEP_KV = 64
+SWEEP_CHUNK = 8
 
 
 def _requests(cfg, rng, n_req=N_REQ):
@@ -67,22 +94,39 @@ def _requests(cfg, rng, n_req=N_REQ):
             for i, n in enumerate(lens)]
 
 
-def _drive(eng, reqs):
-    # warm the jit traces (prefill-chunk step with/without the admission
-    # reset bit, single-token decode step) OUTSIDE the timed region, so
-    # tokens/s measures steady-state decode, not XLA compiles. Safe by
-    # construction: per-slot reset guarantees the timed requests see no
-    # trace of the warmup occupant.
-    eng.submit(Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2, rid=-1))
-    eng.run()
+def _timed_run(eng, reqs):
     for r in reqs:
         eng.submit(Request(prompt=list(r.prompt),
                            max_new_tokens=r.max_new_tokens, rid=r.rid))
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
-    n_tok = sum(len(g.tokens) for g in done)
-    return done, n_tok / dt
+    return done, sum(len(g.tokens) for g in done) / dt
+
+
+def _drive_interleaved(engines, reqs, reps):
+    """Fair tokens/s for a list of (name, engine) serving the same request
+    set: warm every engine first (the rid=-1 request compiles the jit
+    traces — prefill-chunk step with/without the admission reset bit,
+    single-token decode — and one untimed full rep pays page faults and
+    allocator growth off the clock; per-slot reset guarantees timed
+    requests never see warmup state), then alternate timed reps across
+    engines and report per-engine medians plus the raw per-rep series
+    (adjacent entries of one rep are near-simultaneous, so callers can
+    form drift-immune paired ratios). Greedy decode makes every rep's
+    tokens identical, so the last rep's generations stand for all."""
+    for _, eng in engines:
+        eng.submit(Request(prompt=[1, 2, 3, 4, 5], max_new_tokens=2, rid=-1))
+        eng.run()
+        _timed_run(eng, reqs)
+    tps = {name: [] for name, _ in engines}
+    dones = {}
+    for _ in range(reps):
+        for name, eng in engines:
+            done, t = _timed_run(eng, reqs)
+            tps[name].append(t)
+            dones[name] = done
+    return {n: float(np.median(v)) for n, v in tps.items()}, tps, dones
 
 
 def _bench_pair(tag, cfg, fmt, reqs, **eng_kw):
@@ -92,15 +136,17 @@ def _bench_pair(tag, cfg, fmt, reqs, **eng_kw):
     plan = build_plan(params, fmt)
     qparams = plan.quantise(params)
     n_submitted = len(reqs)
+    engines = [
+        (f"{tag}/f32", ServeEngine.from_quantised(
+            cfg, qparams, plan, packed=False, **eng_kw)),
+        (f"{tag}/packed4", ServeEngine.from_quantised(
+            cfg, qparams, plan, **eng_kw))]
+    med, _, dones = _drive_interleaved(engines, reqs, reps=FAMILY_REPS)
     rows, outs = [], {}
-    for path, eng in [
-            (f"{tag}/f32", ServeEngine.from_quantised(
-                cfg, qparams, plan, packed=False, **eng_kw)),
-            (f"{tag}/packed4", ServeEngine.from_quantised(
-                cfg, qparams, plan, **eng_kw))]:
+    for path, eng in engines:
         wb = eng.weight_bytes()
         cb = eng.cache_bytes()
-        done, tps = _drive(eng, reqs)
+        done, tps = dones[path], med[path]
         outs[path] = {g.rid: g.tokens for g in done}
         row = dict(path=path, fmt=fmt, family=wb["family"],
                    weight_bytes=wb["total"],
@@ -170,7 +216,59 @@ def _family_table(fast: bool):
     }
 
 
-def run(fast: bool = True, archs=None):
+def run_batch_sweep(fast: bool = True, batches=None, reps=None):
+    """Decode batch sweep on the **full** paper-100m config: per batch
+    size, packed-vs-dense steady-state tokens/s from interleaved timed
+    reps. Always the full config — smaller configs are cache-resident in
+    both paths and structurally cannot exercise the bandwidth claim; fast
+    mode trims batch points and reps instead. Returns sweep rows
+    (``path="sweep/paper-100m/b{B}"``) carrying the ratio and the
+    greedy-token-identity bit ``check()`` enforces."""
+    batches = tuple(batches) if batches else ((1, 4) if fast else
+                                              SWEEP_BATCHES)
+    reps = reps or (2 if fast else SWEEP_REPS)
+    cfg = configs.get_config("paper-100m", "full").replace(
+        dtype="float32", param_dtype="float32")
+    fam = mapi.get_family(cfg.family)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    plan = build_plan(params, FMT)
+    qparams = plan.quantise(params)
+    del params
+    rng = np.random.default_rng(1)
+    rows = []
+    for B in batches:
+        eng_kw = dict(batch_slots=B, kv_len=SWEEP_KV,
+                      prefill_chunk=SWEEP_CHUNK)
+        engines = [("f32", ServeEngine.from_quantised(
+                        cfg, qparams, plan, packed=False, **eng_kw)),
+                   ("packed4", ServeEngine.from_quantised(
+                        cfg, qparams, plan, **eng_kw))]
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab, 8).tolist(),
+                        max_new_tokens=SWEEP_NEW, rid=i) for i in range(B)]
+        med, raw, dones = _drive_interleaved(engines, reqs, reps=reps)
+        outs = {n: {g.rid: g.tokens for g in d} for n, d in dones.items()}
+        # paired per-rep ratio: each rep times f32 and packed back to back,
+        # so the median of per-rep ratios is immune to slow drift (thermal,
+        # allocator growth) that can flip a near-parity point when the two
+        # engines' medians land on differently-drifted reps
+        pair = float(np.median([p / f for f, p in
+                                zip(raw["f32"], raw["packed4"])]))
+        row = dict(path=f"sweep/paper-100m/b{B}", batch=B,
+                   f32_tokens_per_s=round(med["f32"], 1),
+                   packed4_tokens_per_s=round(med["packed4"], 1),
+                   ratio=round(pair, 3),
+                   tokens_identical=outs["f32"] == outs["packed4"],
+                   reps=reps, max_new=SWEEP_NEW, kv_len=SWEEP_KV,
+                   prefill_chunk=SWEEP_CHUNK, fmt=FMT)
+        print(f"[sweep] B={B}: f32 {row['f32_tokens_per_s']} tok/s, "
+              f"packed {row['packed4_tokens_per_s']} tok/s, "
+              f"ratio {row['ratio']}, "
+              f"identical={row['tokens_identical']}")
+        rows.append(row)
+    return rows
+
+
+def run(fast: bool = True, archs=None, sweep: bool = True):
     rng = np.random.default_rng(0)
     table = _family_table(fast)
     archs = list(table) if archs is None else [a.strip() for a in archs]
@@ -185,6 +283,8 @@ def run(fast: bool = True, archs=None):
             dtype="float32", param_dtype="float32", **extra)
         rows += _bench_pair(tag, cfg, fmt, _requests(cfg, rng, n_req=n_req),
                             **eng_kw)
+    if sweep:
+        rows += run_batch_sweep(fast)
     write_rows("serve_packed", rows)
     _write_bench_serve(rows)
     return rows
@@ -193,10 +293,13 @@ def run(fast: bool = True, archs=None):
 def _write_bench_serve(rows):
     """Machine-readable perf record: tokens/s + resident bytes per path,
     plus a per-family packed-vs-f32 resident ratio (comparable across
-    architectures thanks to the codes/scales/codebooks breakdown). A
-    subset run (``--arch``) merges into the existing record so other
-    families' entries survive."""
-    rec = {"bench": "serve_packed", "paths": {}, "resident_ratio_vs_f32": {}}
+    architectures thanks to the codes/scales/codebooks breakdown) and the
+    decode batch sweep (``batch_sweep``: per batch size, packed and f32
+    tokens/s and their ratio on the full paper-100m config). A subset run
+    (``--arch`` / ``--sweep-only``) merges into the existing record so
+    other entries survive."""
+    rec = {"bench": "serve_packed", "paths": {},
+           "resident_ratio_vs_f32": {}, "batch_sweep": {}}
     if os.path.exists(BENCH_SERVE_OUT):
         try:
             with open(BENCH_SERVE_OUT) as f:
@@ -205,10 +308,15 @@ def _write_bench_serve(rows):
                 rec["paths"].update(old.get("paths", {}))
                 rec["resident_ratio_vs_f32"].update(
                     old.get("resident_ratio_vs_f32", {}))
+                rec["batch_sweep"].update(old.get("batch_sweep", {}))
         except (json.JSONDecodeError, OSError):
             pass
     for r in rows:
-        if "tokens_per_s" in r:
+        if r["path"].startswith("sweep/"):
+            tag = r["path"].split("/")[1]
+            rec["batch_sweep"].setdefault(tag, {})[str(r["batch"])] = {
+                k: v for k, v in r.items() if k not in ("path", "batch")}
+        elif "tokens_per_s" in r:
             rec["paths"][r["path"]] = {
                 k: v for k, v in r.items() if k != "path"}
         else:
@@ -246,8 +354,19 @@ _CACHE_RATIO_CEILING = {"gemma3": 0.25}
 
 def check(rows):
     fails = []
+    # decode batch sweep: the speed claim. Packed must be at least as fast
+    # as the f32 path at EVERY swept batch size, on identical greedy tokens
+    for r in rows:
+        if not r["path"].startswith("sweep/"):
+            continue
+        if r["ratio"] < 1.0:
+            fails.append(f"{r['path']}: packed decode at {r['ratio']}x of "
+                         "f32 tokens/s (< 1.0)")
+        if not r["tokens_identical"]:
+            fails.append(f"{r['path']}: packed and dense engines disagree "
+                         "on greedy tokens")
     by = {r["path"]: r for r in rows}
-    tags = {r["path"].split("/")[0] for r in rows}
+    tags = {r["path"].split("/")[0] for r in rows} - {"sweep"}
     for tag in sorted(tags):
         if not by[f"{tag}/tokens_identical"]["value"]:
             fails.append(f"{tag}: packed and dense engines disagree on "
@@ -281,15 +400,31 @@ def check(rows):
 
 if __name__ == "__main__":
     import argparse
+    import sys
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
                     help="comma-separated family tags to bench "
                          f"(default: all of {', '.join(_family_table(True))})")
     ap.add_argument("--full", action="store_true",
-                    help="full-size paper-100m instead of small")
+                    help="full-size paper-100m family row, full batch sweep "
+                         "(all batch points, more timed reps)")
+    ap.add_argument("--sweep-only", action="store_true",
+                    help="run only the decode batch sweep + its ratio check "
+                         "(the run_tests.sh --bench-smoke target)")
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="family rows only, skip the decode batch sweep")
     args = ap.parse_args()
-    archs = args.arch.split(",") if args.arch else None
-    rows = run(fast=not args.full, archs=archs)
+    if args.sweep_only:
+        rows = run_batch_sweep(fast=not args.full)
+        write_rows("serve_packed_sweep", rows)
+        _write_bench_serve(rows)
+    else:
+        archs = args.arch.split(",") if args.arch else None
+        rows = run(fast=not args.full, archs=archs,
+                   sweep=not args.no_sweep)
     for r in rows:
         print(r)
-    print("check:", check(rows) or "PASS")
+    fails = check(rows)
+    print("check:", fails or "PASS")
+    if fails:
+        sys.exit(1)

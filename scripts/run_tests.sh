@@ -19,6 +19,12 @@
 #                                   (ring vs masked-full-cache greedy
 #                                   parity, wrap-crossing prefill, cache
 #                                   accounting)
+#   scripts/run_tests.sh --bench-smoke
+#                                   smallest decode batch sweep (full-size
+#                                   paper-100m, reduced batch points/reps):
+#                                   enforces packed ≥ f32 tokens/s at every
+#                                   swept batch size with identical greedy
+#                                   tokens; exits non-zero on violation
 #   scripts/run_tests.sh [pytest args...]   extra args forwarded to pytest
 #
 # Works offline: tests/conftest.py shims `hypothesis` when it is missing.
@@ -42,5 +48,9 @@ fi
 if [ "${1:-}" = "--windowed" ]; then
     shift
     exec python -m pytest -q tests/test_serve_windowed.py "$@"
+fi
+if [ "${1:-}" = "--bench-smoke" ]; then
+    shift
+    exec python -m benchmarks.serve_packed --sweep-only "$@"
 fi
 exec python -m pytest -q -m "not slow" "$@"

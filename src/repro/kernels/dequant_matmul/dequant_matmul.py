@@ -4,37 +4,55 @@ hot-spot.
 Decode is HBM-bandwidth-bound: weights stream once per token. Packed 4/8-bit
 codes cut the stream by 4–8× vs bf16 — this kernel realises the paper's
 formats as a bandwidth win by dequantising in VMEM *after* the HBM read,
-feeding the MXU at bf16 without ever materialising the bf16 weight in HBM.
+feeding the matmul without ever materialising the wide weight in HBM.
 
-Two code layouts share one kernel body:
+Two **dequant strategies** share the tiling and the code layouts, picked
+per matmul geometry by the tuning table (``tune.choose_tiles``):
+
+  * **LUT** (``_dequant_tile``) — dequant = one-hot(codes) @ codebook, an
+    MXU-shaped expansion costing ``n_codes`` MACs per weight element. The
+    right choice when M is large (prefill, training matmuls): the LUT work
+    rides the already-busy MXU and amortises over many activation rows.
+  * **decode** (``_decode_tile``) — direct per-element code→value
+    expansion on the VPU: a binary select tree over the code bits for
+    narrow codebooks (≤32 codepoints — 4-bit formats), a vector gather
+    otherwise, with the block scale **folded into the accumulation** (the
+    activation tile is scaled per output block — ``tm·tk`` multiplies —
+    instead of scaling the ``tk·tn`` weight tile). The right choice at
+    decode, where ``M = batch_slots ≪ n_codes`` and the LUT matmul would
+    spend ``tk·tn·n_codes`` MXU MACs against only ``M·tk·tn`` useful ones.
+
+Tile shapes ``(tm, tk, tn)`` are no longer fixed constants: the wrapper
+asks ``tune.choose_tiles(M, K, N, bits)`` — an analytic roofline over the
+legal tile space, cached per geometry, pre-seedable from measured sweeps
+(see ``benchmarks/roofline.py`` for the rendered terms). M is padded up to
+``tm`` with zero rows (sliced off the output), so no divisibility
+constraint leaks to callers: any batch·chunk row count serves.
+
+Code layouts, shared by both strategies:
 
   * ``bits=8`` — one uint8 per code, tile (TK, TN).
   * ``bits=4`` — nibble-packed (two codes per byte along K, the
     ``core.nibble`` per-K-tile half interleave): the HBM read is a
     (TK/2, TN) byte tile, unpacked in VMEM by a shift/mask split into the
     low- and high-nibble code tiles and a sublane concatenate back to
-    (TK, TN) — halving the weight stream again relative to uint8 codes.
+    (TK, TN). The K tile is layout-locked to the interleave tile.
 
 An optional leading dim batches the matmul over stacked experts (MoE
 serving) as an extra outer grid axis — expert weight stacks stream packed
 instead of being densified.
 
 Tiling: grid (E, M/TM, N/TN, K/TK), k innermost for revolving f32
-accumulation in VMEM. Per step: codes (TK/pack, TN) uint8 + scales
-(TK, TN/128) stream in; dequant = one-hot(codes) @ codebook (an
-MXU-friendly LUT expansion) × scale; then x_tile (TM, TK) @ w_tile (TK, TN)
-on the MXU.
+accumulation in VMEM.
 
 ``dequant_matmul_t`` is the **transposed** variant: y = x @ dequant(W).T
 for codes stored (V, D) with scales blocked along D — the contraction now
 runs along the *blocked* axis. This is the tied-embeddings unembed: the
 packed ``embed`` table (codes (V, D), gather-ready for lookups) serves the
-logits matmul directly, so ``unembed = embed.T`` never materialises. The
-dequant tile body (nibble unpack + one-hot LUT + block scale) is shared;
-only the contracting MXU dims and the grid axis roles differ: the output
-axis walks the codes' (possibly nibble-packed) row dim and the accumulated
-axis walks the blocked column dim.
-"""
+logits matmul directly, so ``unembed = embed.T`` never materialises. Both
+dequant strategies apply; the decode strategy folds the block scale into
+the *output* tile instead (the scale varies along V and the D block — a
+``tm·tv`` multiply per block against the LUT path's ``tv·td``)."""
 from __future__ import annotations
 
 import functools
@@ -45,24 +63,31 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.nibble import NIBBLE_K_TILE
+from repro.kernels.dequant_matmul.tune import choose_tiles
 
 BLOCK = 128
+# legacy fixed tiles: still exported as the capacity quantum callers pad
+# ragged row counts to (MoE dispatch); tune.choose_tiles picks actual tiles
 TILE_M = 128
 TILE_K = NIBBLE_K_TILE  # K tile == the nibble interleave tile (core.nibble)
 TILE_N = 256
 
 
+def _unpack(c):
+    """In-VMEM nibble unpack: low nibbles are the row tile's first R/2
+    rows, high nibbles the second (per-tile half interleave), so the
+    split is two vector ops + one sublane concat, no lane shuffles."""
+    return jnp.concatenate([c & 0xF, c >> 4], axis=0)
+
+
 def _dequant_tile(c, s, cb, *, block: int, n_codes: int, bits: int):
-    """Shared dequant body: packed code tile → bf16-ready weight tile.
+    """LUT-strategy dequant body: packed code tile → weight tile.
 
     c: (R/pack, C) int32 codes (R rows restored if nibble-packed);
     s: (R, C/block) scales, blocks along the tile's last axis;
     returns (R, C) f32 dequantised weights."""
     if bits == 4:
-        # in-VMEM nibble unpack: low nibbles are the row tile's first R/2
-        # rows, high nibbles the second (per-tile half interleave), so the
-        # split is two vector ops + one sublane concat, no lane shuffles.
-        c = jnp.concatenate([c & 0xF, c >> 4], axis=0)
+        c = _unpack(c)
     r, n = c.shape
     # LUT via one-hot matmul: MXU-shaped, avoids vector gather
     onehot = (c[..., None] ==
@@ -75,34 +100,86 @@ def _dequant_tile(c, s, cb, *, block: int, n_codes: int, bits: int):
     return (w.reshape(r, n // block, block) * s[..., None]).reshape(r, n)
 
 
+def _decode_tile(c, cb, *, n_codes: int, bits: int):
+    """Decode-strategy dequant body: *unscaled* code values, no MXU.
+
+    Narrow codebooks (≤32 codepoints — every 4-bit format) expand through
+    a binary select tree over the code bits: ``n_codes - 1`` VPU selects
+    against scalar codepoints, no gather, no one-hot matmul. Wider
+    codebooks (bits=8) fall back to a vector gather. Returns (R, C) f32;
+    the caller folds the block scale into the accumulation."""
+    if bits == 4:
+        c = _unpack(c)
+    if n_codes > 32:
+        return cb[c].astype(jnp.float32)
+    depth = max(1, (n_codes - 1).bit_length())
+    vals = [cb[min(q, n_codes - 1)].astype(jnp.float32)
+            for q in range(1 << depth)]
+    for b in range(depth):
+        bit = ((c >> b) & 1) == 1
+        vals = [jnp.where(bit, vals[2 * i + 1], vals[2 * i])
+                for i in range(len(vals) // 2)]
+    return vals[0]
+
+
 def _kernel(x_ref, codes_ref, scales_ref, cb_ref, o_ref, acc_ref, *,
-            block: int, n_codes: int, bits: int):
+            block: int, n_codes: int, bits: int, decode: bool):
     @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = _dequant_tile(codes_ref[0].astype(jnp.int32), scales_ref[0],
-                      cb_ref[...], block=block, n_codes=n_codes, bits=bits)
-    x = x_ref[0].astype(jnp.bfloat16)               # (TM, TK)
-    acc_ref[...] += jax.lax.dot_general(
-        x, w.astype(jnp.bfloat16), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    c = codes_ref[0].astype(jnp.int32)
+    if decode:
+        # fold the block scale into the accumulation: scale the (tm, tk)
+        # activation tile once per output block — tm ≪ block at decode, so
+        # this replaces the tk·tn weight-scale multiply with tm·tk·(tn/b)
+        w = _decode_tile(c, cb_ref[...], n_codes=n_codes, bits=bits)
+        x = x_ref[0].astype(jnp.float32)
+        s = scales_ref[0].astype(jnp.float32)       # (tk, tn // block)
+        parts = []
+        for nb in range(w.shape[1] // block):
+            xs = x * s[:, nb][None, :]
+            parts.append(jax.lax.dot_general(
+                xs, w[:, nb * block:(nb + 1) * block],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32))
+        acc_ref[...] += jnp.concatenate(parts, axis=1)
+    else:
+        w = _dequant_tile(c, scales_ref[0], cb_ref[...], block=block,
+                          n_codes=n_codes, bits=bits)
+        x = x_ref[0].astype(jnp.bfloat16)           # (TM, TK)
+        acc_ref[...] += jax.lax.dot_general(
+            x, w.astype(jnp.bfloat16), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
     def _done():
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block", "bits", "interpret", "out_dtype"))
+def _resolve(M, K, N, bits, n_codes, block, variant):
+    """Tiles + strategy for one geometry: tuning table unless forced."""
+    tm, tk, tn, decode = choose_tiles(M, K, N, bits, n_codes=n_codes,
+                                      block=block)
+    if variant is not None:
+        decode = variant == "decode"
+    return tm, tk, tn, decode
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bits", "interpret",
+                                             "out_dtype", "variant"))
 def dequant_matmul(x, codes, scales, codebook, block: int = BLOCK,
                    bits: int = 8, interpret: bool = False,
-                   out_dtype=jnp.bfloat16):
+                   out_dtype=jnp.bfloat16, variant: str | None = None):
     """x (*lead, M, K) @ dequant(codes, scales) → (*lead, M, N).
 
     codes: (*lead, K, N) uint8, or (*lead, K // 2, N) nibble-packed bytes
     when ``bits == 4``. scales: (*lead, K, N // block). ``lead`` is at most
-    one dim (stacked experts), batched as an outer grid axis."""
+    one dim (stacked experts), batched as an outer grid axis.
+
+    ``variant``: None (default) lets the tuning table pick the dequant
+    strategy per geometry; "lut" / "decode" force it (tests, sweeps). M is
+    padded up to the M tile with zero rows — any row count serves."""
     lead = x.ndim == 3
     if not lead:
         x, codes, scales = x[None], codes[None], scales[None]
@@ -111,13 +188,17 @@ def dequant_matmul(x, codes, scales, codebook, block: int = BLOCK,
     assert codes.shape[0] == E and codes.shape[1] * pack == K
     N = codes.shape[2]
     assert N % block == 0
-    tm, tk, tn = min(TILE_M, M), min(TILE_K, K), min(TILE_N, N)
-    assert M % tm == 0 and K % tk == 0 and N % tn == 0 and tn % block == 0
-    assert tk % pack == 0
     n_codes = codebook.shape[0]
-    grid = (E, M // tm, N // tn, K // tk)
+    tm, tk, tn, decode = _resolve(M, K, N, bits, n_codes, block, variant)
+    assert K % tk == 0 and N % tn == 0 and tn % block == 0
+    assert tk % pack == 0
+    pad_m = (-M) % tm
+    if pad_m:
+        x = jnp.pad(x, ((0, 0), (0, pad_m), (0, 0)))
+    grid = (E, (M + pad_m) // tm, N // tn, K // tk)
     out = pl.pallas_call(
-        functools.partial(_kernel, block=block, n_codes=n_codes, bits=bits),
+        functools.partial(_kernel, block=block, n_codes=n_codes, bits=bits,
+                          decode=decode),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, tm, tk), lambda e, i, j, k: (e, i, k)),
@@ -126,39 +207,58 @@ def dequant_matmul(x, codes, scales, codebook, block: int = BLOCK,
             pl.BlockSpec((n_codes,), lambda e, i, j, k: (0,)),
         ],
         out_specs=pl.BlockSpec((1, tm, tn), lambda e, i, j, k: (e, i, j)),
-        out_shape=jax.ShapeDtypeStruct((E, M, N), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((E, M + pad_m, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
         interpret=interpret,
     )(x, codes, scales, codebook)
+    if pad_m:
+        out = out[:, :M]
     return out if lead else out[0]
 
 
 def _kernel_t(x_ref, codes_ref, scales_ref, cb_ref, o_ref, acc_ref, *,
-              block: int, n_codes: int, bits: int):
+              block: int, n_codes: int, bits: int, decode: bool):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # w tile is (TV, TD) in the codes layout; the contraction runs along
-    # its *last* (blocked) axis, so the MXU call contracts dim 1 of both
+    # its *last* (blocked) axis, so the matmul contracts dim 1 of both
     # operands instead of transposing the tile.
-    w = _dequant_tile(codes_ref[...].astype(jnp.int32), scales_ref[...],
-                      cb_ref[...], block=block, n_codes=n_codes, bits=bits)
-    x = x_ref[...].astype(jnp.bfloat16)             # (TM, TD)
-    acc_ref[...] += jax.lax.dot_general(
-        x, w.astype(jnp.bfloat16), (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    c = codes_ref[...].astype(jnp.int32)
+    if decode:
+        # the scale varies along V (output) and the D block (contraction):
+        # fold it into the *output* tile — a (tm, tv) multiply per block
+        # instead of scaling the (tv, td) weight tile
+        w = _decode_tile(c, cb_ref[...], n_codes=n_codes, bits=bits)
+        x = x_ref[...].astype(jnp.float32)
+        s = scales_ref[...].astype(jnp.float32)     # (tv, td // block)
+        acc = jnp.zeros_like(acc_ref)
+        for db in range(w.shape[1] // block):
+            sl = slice(db * block, (db + 1) * block)
+            part = jax.lax.dot_general(
+                x[:, sl], w[:, sl], (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc += part * s[:, db][None, :]
+        acc_ref[...] += acc
+    else:
+        w = _dequant_tile(c, scales_ref[...], cb_ref[...], block=block,
+                          n_codes=n_codes, bits=bits)
+        x = x_ref[...].astype(jnp.bfloat16)         # (TM, TD)
+        acc_ref[...] += jax.lax.dot_general(
+            x, w.astype(jnp.bfloat16), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _done():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block", "bits", "interpret", "out_dtype"))
+@functools.partial(jax.jit, static_argnames=("block", "bits", "interpret",
+                                             "out_dtype", "variant"))
 def dequant_matmul_t(x, codes, scales, codebook, block: int = BLOCK,
                      bits: int = 8, interpret: bool = False,
-                     out_dtype=jnp.bfloat16):
+                     out_dtype=jnp.bfloat16, variant: str | None = None):
     """x (M, D) @ dequant(codes, scales).T → (M, V): contraction along the
     **blocked** axis (tied-embeddings unembed).
 
@@ -166,20 +266,24 @@ def dequant_matmul_t(x, codes, scales, codebook, block: int = BLOCK,
     ``bits == 4`` (the ``core.nibble`` interleave along V — the same layout
     ``embed_lookup`` gathers rows from). scales: (V, D // block), blocks
     along D. The output-rows tile equals the nibble interleave tile so the
-    in-VMEM unpack of the V axis stays the two-op split + sublane concat."""
+    in-VMEM unpack of the V axis stays the two-op split + sublane concat.
+    ``variant``/M padding as in :func:`dequant_matmul`."""
     M, D = x.shape
     pack = 2 if bits == 4 else 1
     V = codes.shape[0] * pack
     assert codes.shape[1] == D and scales.shape == (V, D // block)
-    tm = min(TILE_M, M)
-    tv = min(TILE_K, V)   # output rows walk the (nibble-interleaved) V axis
-    td = min(TILE_N, D)
-    assert M % tm == 0 and V % tv == 0 and D % td == 0 and td % block == 0
-    assert tv % pack == 0
     n_codes = codebook.shape[0]
-    grid = (M // tm, V // tv, D // td)
-    return pl.pallas_call(
-        functools.partial(_kernel_t, block=block, n_codes=n_codes, bits=bits),
+    # the V axis plays the nibble-tiled role, D the blocked one
+    tm, tv, td, decode = _resolve(M, V, D, bits, n_codes, block, variant)
+    assert V % tv == 0 and D % td == 0 and td % block == 0
+    assert tv % pack == 0
+    pad_m = (-M) % tm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    grid = ((M + pad_m) // tm, V // tv, D // td)
+    out = pl.pallas_call(
+        functools.partial(_kernel_t, block=block, n_codes=n_codes, bits=bits,
+                          decode=decode),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tm, td), lambda i, j, k: (i, k)),
@@ -188,7 +292,8 @@ def dequant_matmul_t(x, codes, scales, codebook, block: int = BLOCK,
             pl.BlockSpec((n_codes,), lambda i, j, k: (0,)),
         ],
         out_specs=pl.BlockSpec((tm, tv), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, V), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((M + pad_m, V), out_dtype),
         scratch_shapes=[pltpu.VMEM((tm, tv), jnp.float32)],
         interpret=interpret,
     )(x, codes, scales, codebook)
+    return out[:M] if pad_m else out

@@ -1,15 +1,37 @@
-"""Pure-jnp oracle for the fused dequantise-matmul kernel.
+"""Pure-jnp oracles for the fused dequantise-matmul kernel.
 
 y = x @ dequant(codes, scales): x (*lead, M, K) bf16; weight codes
 (*lead, K, N) uint8 — or (*lead, K // 2, N) nibble-packed bytes with
 ``bits=4`` (the ``core.nibble`` layout) — with scales (*lead, K, N/block),
 blocks along the output (lane) dim. Nibble unpack restores the exact uint8
-codes, so the oracle is bit-identical across the two storage widths."""
+codes, so the oracle is bit-identical across the two storage widths.
+
+Two oracles per orientation:
+
+* ``dequant_matmul_ref`` / ``dequant_matmul_t_ref`` — the plain einsum
+  form, the semantic reference everything else is checked against.
+* ``dequant_matmul_decode_ref`` / ``dequant_matmul_t_decode_ref`` — the
+  **small-M decode** form the CPU serving fallback dispatches to
+  (``kernels.ops``). Each output element is still one full-K dot in f32
+  (panels split only the output axis), shaped around two measured
+  CPU/XLA pathologies at decode: (1) ``M == 1`` is padded to 2 rows —
+  XLA fuses the gather-dequant into a scalar (non-vectorised) reduction
+  for single-row matmuls, 3–10× slower than ``M == 2``; (2) outputs are
+  computed in **N-panels** sized so the dequantised f32 panel stays
+  cache-resident instead of materialising the full (K, N) f32 weight —
+  skipped for wide contractions (``K > 1536``), where the concatenate
+  costs more than the panels save. Output is *bit-identical* to the plain
+  refs for ``M ≥ 2``;
+  at ``M == 1`` the pad lets XLA pick a different (vectorised) summation
+  tree for the same f32 dot, so logits can differ at reassociation level
+  — greedy tokens stay identical to the dense path (checked end-to-end by
+  the serve bench)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from repro.core.nibble import unpack_nibbles
+from repro.core.nibble import nibble_k_tile, unpack_nibbles
 
 
 def dequant_matmul_ref(x, codes, scales, codebook, block: int = 128,
@@ -37,3 +59,108 @@ def dequant_matmul_t_ref(x, codes, scales, codebook, block: int = 128,
     w = (w * scales[..., None]).reshape(V, D)
     return jnp.einsum("md,vd->mv", x.astype(jnp.float32),
                       w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# small-M decode oracles
+
+# target size (f32 elements) for the dequantised weight panel. Measured on
+# the serving hosts: weights small enough that codes + panel live in L2
+# want ~512KB f32 panels; huge weights (the vocab unembed) want panels an
+# order of magnitude wider — the per-panel gather is equally fast once the
+# panel is cache-resident, and fewer segments cut the concatenate/dispatch
+# overhead (~25% of the unembed matmul at the old 512KB sizing).
+_PANEL_ELEMS = 131072
+_PANEL_ELEMS_BIG = 4_194_304
+_BIG_CUT = 8_388_608     # K·N elems above which the BIG target applies
+
+
+def _panel(K: int, N: int, quantum: int) -> int | None:
+    """Output-axis panel width, or None to dequantise in one piece.
+
+    Wide contractions (``K > 1536``) lose to panelling at every measured
+    M — the gather already streams cache-friendly there and the extra
+    concatenate only costs; skip them. Otherwise pick the largest panel
+    that divides ``N``, is a multiple of ``quantum`` (the scale block, or
+    the nibble interleave tile when panelling the packed axis), and stays
+    at or under the elems target — panels help even at M == 2 on the
+    narrow-K projection shapes."""
+    if K > 1536 or N < 4 * quantum:
+        return None
+    target = (_PANEL_ELEMS_BIG if K * N >= _BIG_CUT else _PANEL_ELEMS) // K
+    target = max(target, quantum)
+    target += (-target) % quantum
+    p = max((q for q in range(quantum, target + 1, quantum) if N % q == 0),
+            default=None)
+    return p if p is not None and N >= 2 * p else None
+
+
+def _pad_rows(x):
+    """Pad M == 1 → 2: XLA lowers single-row gather-dequant matmuls to a
+    scalar reduction, 3–10× slower than the 2-row vector form."""
+    if x.shape[0] == 1:
+        return jnp.concatenate([x, jnp.zeros_like(x)], axis=0), 1
+    return x, 0
+
+
+def dequant_matmul_decode_ref(x, codes, scales, codebook, block: int = 128,
+                              bits: int = 8):
+    """Decode-shaped oracle: x (M, K) with small M. Bit-identical output to
+    :func:`dequant_matmul_ref` for M ≥ 2 (full-K dots; panels split only
+    N); M == 1 pays only summation-order reassociation (see module doc)."""
+    K2, N = codes.shape
+    K = K2 * (2 if bits == 4 else 1)
+    M = x.shape[0]
+    x, pad = _pad_rows(x)
+    xf = x.astype(jnp.float32)
+
+    def dq(c, s):
+        if bits == 4:
+            c = unpack_nibbles(c, K)
+        w = codebook[c.astype(jnp.int32)].reshape(K, -1, block)
+        return (w * s[..., None]).reshape(K, -1)
+
+    panel = _panel(K, N, block)
+    if panel is None:
+        y = xf @ dq(codes, scales)
+    else:
+        y = jnp.concatenate(
+            [xf @ dq(codes[:, p0:p0 + panel],
+                     scales[:, p0 // block:(p0 + panel) // block])
+             for p0 in range(0, N, panel)], axis=1)
+    return (y[:M] if pad else y).astype(x.dtype)
+
+
+def dequant_matmul_t_decode_ref(x, codes, scales, codebook, block: int = 128,
+                                bits: int = 8):
+    """Decode-shaped transposed oracle (x (M, D), codes (V, D)): panels run
+    along the packed V axis, in whole nibble interleave tiles so each slice
+    unpacks independently. Bit-identical to :func:`dequant_matmul_t_ref`
+    for M ≥ 2; M == 1 as in :func:`dequant_matmul_decode_ref`."""
+    pack = 2 if bits == 4 else 1
+    V, D = codes.shape[0] * pack, codes.shape[1]
+    M = x.shape[0]
+    x, pad = _pad_rows(x)
+    xf = x.astype(jnp.float32)
+
+    def dq(c, s, v):
+        if bits == 4:
+            c = unpack_nibbles(c, v)
+        w = codebook[c.astype(jnp.int32)].reshape(v, D // block, block)
+        return (w * s[..., None]).reshape(v, D)
+
+    def dot_t(a, w):  # contract last/last, no transpose temp
+        return jax.lax.dot_general(a, w, (((1,), (1,)), ((), ())))
+
+    quantum = nibble_k_tile(V) if bits == 4 else block
+    panel = _panel(D, V, quantum)
+    if panel is not None and bits == 4 and nibble_k_tile(panel) != quantum:
+        panel = None  # slice would re-tile the interleave differently
+    if panel is None:
+        y = dot_t(xf, dq(codes, scales, V))
+    else:
+        y = jnp.concatenate(
+            [dot_t(xf, dq(codes[v0 // pack:(v0 + panel) // pack],
+                          scales[v0:v0 + panel], panel))
+             for v0 in range(0, V, panel)], axis=1)
+    return (y[:M] if pad else y).astype(x.dtype)

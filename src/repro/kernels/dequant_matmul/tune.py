@@ -1,0 +1,150 @@
+"""Tile + strategy selection for the fused dequant matmuls.
+
+``choose_tiles(M, K, N, bits)`` answers two questions the kernel used to
+hard-code: *which dequant strategy* (the MXU one-hot LUT expansion, or the
+direct gather/select decode) and *which tile shape* ``(tm, tk, tn)``.
+
+Both answers come from a small analytic roofline rather than guesswork:
+per legal tile candidate we estimate the HBM stream (packed code bytes +
+scales + the activation re-reads each output-column sweep pays) and the
+dequant work (the LUT matmul is ``n_codes`` MACs per weight element on the
+MXU, spent again every M-tile sweep; the decode variant is a handful of
+VPU select/FMA ops per element instead), and take the cheapest. The model
+is deliberately coarse — its job is to rank tile shapes, not predict
+microseconds — and ``benchmarks/roofline.py`` renders the same terms next
+to measured serve shapes so the choices stay inspectable.
+
+Resolved choices land in ``_TABLE``, an in-process tuning cache keyed by
+``(M, K, N, bits, n_codes, block)``: each distinct matmul geometry pays the
+candidate sweep once per process, and entries can be pre-seeded (or
+overridden, e.g. from a measured autotune sweep) via :func:`register`.
+
+Hard layout constraints the candidate sweep respects:
+
+* ``bits=4``: the K tile is **locked** to the ``core.nibble`` interleave
+  tile — the in-VMEM unpack (mask/shift + sublane concat) is only valid on
+  a whole interleave tile, so ``tk`` is not free.
+* ``tn`` must be a multiple of the scale block; ``tm``/``tk``/``tn`` must
+  divide the (M-padded) operand shapes; every operand tile must fit VMEM.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+from repro.core.nibble import nibble_k_tile
+
+BLOCK = 128
+
+# coarse accelerator model (v5p-class ratios; only *ratios* drive choices)
+PEAK_FLOPS = 197e12          # MXU f32-accumulate bf16 MACs/s × 2
+VPU_FLOPS = PEAK_FLOPS / 8   # vector unit, elementwise ops/s
+HBM_BW = 819e9               # bytes/s
+VMEM_BUDGET = 8 * 2 ** 20    # per-call operand budget (half of ~16MB VMEM)
+
+# decode strategy: ~`4`-deep select tree (bits=4) or vector gather
+# (bits=8) + the per-block scale FMA — a per-element VPU op count
+DECODE_OPS_PER_ELEM = {4: 10.0, 8: 4.0}
+
+
+class TileChoice(NamedTuple):
+    tm: int
+    tk: int
+    tn: int
+    decode: bool  # True: direct gather/select decode; False: one-hot LUT
+
+
+_TABLE: Dict[Tuple[int, int, int, int, int, int], TileChoice] = {}
+
+
+def register(M: int, K: int, N: int, bits: int, choice: TileChoice,
+             n_codes: int = 16, block: int = BLOCK) -> None:
+    """Pre-seed (or override) the tuning table for one matmul geometry."""
+    _TABLE[(M, K, N, bits, n_codes, block)] = choice
+
+
+def _pad_up(x: int, m: int) -> int:
+    return x + (-x) % m
+
+
+def estimate(M: int, K: int, N: int, bits: int, tm: int, tk: int, tn: int,
+             n_codes: int, decode: bool, block: int = BLOCK) -> dict:
+    """Roofline terms for one (tiles, strategy) candidate.
+
+    Returns a dict of byte/flop terms plus ``time`` (seconds, coarse).
+    ``benchmarks/roofline.py`` renders these; :func:`choose_tiles` ranks
+    by ``time``."""
+    Mp = _pad_up(M, tm)
+    m_sweeps = Mp // tm           # times the full weight stream is read
+    n_sweeps = N // tn            # times the activation block is re-read
+    code_bytes = K * N * bits // 8 * m_sweeps
+    scale_bytes = K * (N // block) * 2 * m_sweeps
+    x_bytes = Mp * K * 2 * n_sweeps
+    out_bytes = Mp * N * 2
+    hbm = code_bytes + scale_bytes + x_bytes + out_bytes
+    matmul_flops = 2 * Mp * K * N
+    if decode:
+        dequant_flops = K * N * DECODE_OPS_PER_ELEM[bits] * m_sweeps
+        dequant_time = dequant_flops / VPU_FLOPS
+        # the decode variant keeps weights (and x) f32 through the main
+        # matmul — half the MXU rate of the LUT path's bf16 feed. This is
+        # the term that hands large-M (prefill) shapes back to the LUT
+        # strategy: its per-element dequant overhead amortises over the M
+        # tile, while the f32 matmul penalty scales with M itself.
+        matmul_time = matmul_flops / (PEAK_FLOPS / 2)
+    else:
+        # one-hot LUT matmul: (tile · n_codes) MACs per weight element on
+        # the MXU, but the (r·c, n_codes) @ (n_codes, 1) shape drives the
+        # systolic array at ~n_codes/128 occupancy for narrow codebooks
+        dequant_flops = 2 * K * N * n_codes * m_sweeps
+        occupancy = min(1.0, n_codes / 128)
+        dequant_time = dequant_flops / (PEAK_FLOPS * occupancy)
+        matmul_time = matmul_flops / PEAK_FLOPS
+    time = max(hbm / HBM_BW, matmul_time + dequant_time)
+    return {"hbm_bytes": hbm, "code_bytes": code_bytes,
+            "dequant_flops": dequant_flops, "matmul_flops": matmul_flops,
+            "dequant_time": dequant_time, "time": time}
+
+
+def _vmem_ok(tm: int, tk: int, tn: int, bits: int, block: int,
+             n_codes: int) -> bool:
+    codes = tk * bits // 8 * tn
+    scales = tk * _pad_up(tn // block, 1) * 4
+    x = tm * tk * 4
+    w = tk * tn * 4          # dequantised tile
+    acc = tm * tn * 4
+    return codes + scales + x + w + acc + n_codes * 4 <= VMEM_BUDGET
+
+
+def choose_tiles(M: int, K: int, N: int, bits: int, n_codes: int = 16,
+                 block: int = BLOCK) -> TileChoice:
+    """Pick (tm, tk, tn, decode) for one matmul geometry, cached.
+
+    M is the *logical* row count — callers pad M up to ``tm`` (the kernel
+    wrappers do this; no tile needs to divide the raw M)."""
+    key = (M, K, N, bits, n_codes, block)
+    hit = _TABLE.get(key)
+    if hit is not None:
+        return hit
+    if bits == 4:
+        tks = [nibble_k_tile(K)]  # layout-locked to the nibble interleave
+    else:
+        tks = [t for t in (512, 256, 128) if K % t == 0] or [K]
+    tms = sorted({min(t, _pad_up(M, 8)) for t in (8, 16, 32, 64, 128)})
+    tns = [t for t in (512, 256, 128) if N % t == 0 and t % block == 0]
+    if not tns:
+        tns = [N]
+    best, best_t = None, None
+    for tm in tms:
+        for tk in tks:
+            for tn in tns:
+                if not _vmem_ok(tm, tk, tn, bits, block, n_codes):
+                    continue
+                for decode in (False, True):
+                    t = estimate(M, K, N, bits, tm, tk, tn, n_codes,
+                                 decode, block)["time"]
+                    if best is None or t < best:
+                        best = t
+                        best_t = TileChoice(tm, tk, tn, decode)
+    assert best_t is not None, (M, K, N, bits)
+    _TABLE[key] = best_t
+    return best_t

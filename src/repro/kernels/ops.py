@@ -11,7 +11,15 @@ from .block_quant.ref import block_quant_ref, block_dequant_ref
 from .dequant_matmul.dequant_matmul import TILE_M as MATMUL_TILE_M
 from .dequant_matmul.dequant_matmul import dequant_matmul as _dqm_pallas
 from .dequant_matmul.dequant_matmul import dequant_matmul_t as _dqmt_pallas
-from .dequant_matmul.ref import dequant_matmul_ref, dequant_matmul_t_ref
+from .dequant_matmul.ref import (dequant_matmul_decode_ref, dequant_matmul_ref,
+                                 dequant_matmul_t_decode_ref,
+                                 dequant_matmul_t_ref)
+
+# Every 2-D x on the CPU fallback takes the decode-shaped oracle: its M=1
+# pad and cache-sized N-panels win or tie the plain einsum at every
+# measured M — decode rows (M = batch slots) by up to 4×, prefill chunks
+# (M = slots × chunk, 32–192) by 1.2–2.5× on narrow-K shapes. Only the
+# batched MoE lead-dim path (3-D x) stays on the plain oracle.
 
 
 def on_tpu() -> bool:
@@ -45,10 +53,17 @@ def dequant_matmul(x, codes, scales, codebook, block: int = 128,
 
     ``bits=4``: codes are nibble-packed ((*lead, K//2, N) bytes, the
     ``core.nibble`` layout) and unpacked in VMEM after the HBM read. An
-    optional leading dim batches over stacked experts (MoE serving)."""
+    optional leading dim batches over stacked experts (MoE serving).
+
+    The off-TPU fallback dispatches by shape: 2-D x takes the decode-shaped
+    oracle (panelled; bit-identical to the plain einsum oracle in ``ref.py``
+    for M ≥ 2), the batched MoE lead-dim form the plain oracle."""
     if interpret is None:
         interpret = not on_tpu()
     if interpret and not on_tpu():
+        if x.ndim == 2:
+            return dequant_matmul_decode_ref(x, codes, scales, codebook,
+                                             block, bits=bits)
         return dequant_matmul_ref(x, codes, scales, codebook, block,
                                   bits=bits)
     return _dqm_pallas(x, codes, scales, codebook, block=block, bits=bits,
@@ -56,9 +71,9 @@ def dequant_matmul(x, codes, scales, codebook, block: int = 128,
 
 
 def dequant_matmul_interpret(x, codes, scales, codebook, block: int = 128,
-                             bits: int = 8):
+                             bits: int = 8, variant: str | None = None):
     return _dqm_pallas(x, codes, scales, codebook, block=block, bits=bits,
-                       interpret=True)
+                       interpret=True, variant=variant)
 
 
 def dequant_matmul_t(x, codes, scales, codebook, block: int = 128,
@@ -66,10 +81,15 @@ def dequant_matmul_t(x, codes, scales, codebook, block: int = 128,
     """x @ dequant(codes, scales).T — contraction along the **blocked**
     axis (the tied-embeddings unembed: the packed embed table (V, D) serves
     the logits matmul without materialising its transpose). Fused on TPU;
-    oracle off-TPU. ``bits=4``: codes nibble-packed along V."""
+    oracle off-TPU. ``bits=4``: codes nibble-packed along V. Off-TPU, 2-D
+    calls take the decode-shaped oracle, bit-identical to the plain one
+    for M ≥ 2."""
     if interpret is None:
         interpret = not on_tpu()
     if interpret and not on_tpu():
+        if x.ndim == 2:
+            return dequant_matmul_t_decode_ref(x, codes, scales, codebook,
+                                               block, bits=bits)
         return dequant_matmul_t_ref(x, codes, scales, codebook, block,
                                     bits=bits)
     return _dqmt_pallas(x, codes, scales, codebook, block=block, bits=bits,
@@ -77,9 +97,9 @@ def dequant_matmul_t(x, codes, scales, codebook, block: int = 128,
 
 
 def dequant_matmul_t_interpret(x, codes, scales, codebook, block: int = 128,
-                               bits: int = 8):
+                               bits: int = 8, variant: str | None = None):
     return _dqmt_pallas(x, codes, scales, codebook, block=block, bits=bits,
-                        interpret=True)
+                        interpret=True, variant=variant)
 
 
 def dequant_rows(codes, scales, codebook, block: int = 128, dtype=None,

@@ -86,18 +86,13 @@ def expert_matmul(x, w, spec: str):
     weight w (E, K, N) (``spec`` e.g. "ecd,edf->ecf"). Packed expert stacks
     route through ``dequant_matmul``'s leading expert dim — the codes stream
     packed per expert instead of densifying the whole stack. The dispatch
-    capacity C is whatever the router chose, so pad it up to the kernel's M
-    tile when it exceeds one tile (zero rows; sliced off the output) —
-    routing semantics stay bit-identical to the dense einsum path."""
+    capacity C is whatever the router chose; the kernel pads rows to its M
+    tile internally, so routing semantics stay bit-identical to the dense
+    einsum path at any capacity."""
     if isinstance(w, PackedTensor):
-        C = x.shape[-2]
-        t = kops.MATMUL_TILE_M
-        pad = (-C) % t if C > t else 0
-        if pad:
-            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
         y = kops.dequant_matmul(x, w.codes, w.scales, w.codebook(),
                                 block=w.block, bits=w.bits)
-        return (y[:, :C] if pad else y).astype(x.dtype)
+        return y.astype(x.dtype)
     return jnp.einsum(spec, x, w.astype(x.dtype))
 
 

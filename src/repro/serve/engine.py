@@ -23,6 +23,7 @@ absent) and is scattered into that slot's state rows.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -32,6 +33,22 @@ import numpy as np
 
 from repro.core.tensor_format import PackedTensor
 from repro.models.api import ModelConfig, ParamSpec, get_family
+
+
+def alloc_decode_state(fam, cfg: ModelConfig, batch_slots: int, kv_len: int,
+                       *, slack: int, windowed: bool = True):
+    """Allocate zeroed decode state from a family's grouped cache specs.
+
+    The single spec→zeros call both the engine and :func:`greedy_generate`
+    allocate through, so library/test decodes share the engine's cache
+    geometry (same slack + windowed semantics) instead of drifting.
+    ``slack`` is the prefill chunk length: cache rows past ``kv_len`` that
+    chunk writes may spill into (and the ring-length margin; see
+    serve.cache)."""
+    specs = fam.decode_state_specs(cfg, batch_slots, kv_len, slack=slack,
+                                   windowed=windowed)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
 @dataclass
@@ -149,11 +166,9 @@ class ServeEngine:
         # position (never visible — positions ≥ kv_len are never attended),
         # and it keeps ring-buffer clobbering outside every window
         # (ring length ≥ window + chunk - 1; see serve.cache)
-        specs = self.fam.decode_state_specs(
-            self.cfg, self.B, self.kv_len, slack=self.prefill_chunk,
-            windowed=self.windowed_cache)
-        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
-                            is_leaf=lambda x: isinstance(x, ParamSpec))
+        return alloc_decode_state(self.fam, self.cfg, self.B, self.kv_len,
+                                  slack=self.prefill_chunk,
+                                  windowed=self.windowed_cache)
 
     # ------------------------------------------------------------ accounting
     def weight_bytes(self) -> dict:
@@ -169,7 +184,10 @@ class ServeEngine:
             if isinstance(leaf, PackedTensor):
                 codes += int(leaf.codes.size) * leaf.codes.dtype.itemsize
                 scales += int(leaf.scales.size) * leaf.scales.dtype.itemsize
-                codebooks += 4 * len(leaf.codepoints)
+                # size the codebook at its actual stored dtype (the array
+                # the kernel reads), not an assumed 4 bytes per entry
+                cb = leaf.codebook()
+                codebooks += int(cb.size) * cb.dtype.itemsize
             else:
                 dense += int(leaf.size) * leaf.dtype.itemsize
         packed = codes + scales + codebooks
@@ -232,7 +250,14 @@ class ServeEngine:
         self._queue.append(req)
 
     def run(self, max_steps: int = 512) -> List[Generation]:
-        """Drive decode until queue + slots drain (or max_steps)."""
+        """Drive decode until queue + slots drain, or ``max_steps`` expires.
+
+        Returns every generation that made progress: finished ones
+        (``done=True``) and — if the step budget ran out first — the
+        still-live partial ones (``done=False``), with a ``RuntimeWarning``
+        naming the live-slot and still-queued counts, so callers can never
+        silently receive fewer generations than they submitted. Live slots
+        keep their state; calling ``run`` again continues them."""
         finished: List[Generation] = []
         for _ in range(max_steps):
             self._fill_slots()
@@ -279,6 +304,17 @@ class ServeEngine:
                 if self._slot_pos[i] < len(self._slot_prompt[i]):
                     continue                      # still prefilling
                 self._emit_token(i, g, logits[i, v - 1], finished)
+        live = [g for g in self._slots if g is not None]
+        if live or self._queue:
+            # max_steps expired mid-flight: surface the truncation instead
+            # of silently returning fewer generations than were submitted
+            warnings.warn(
+                f"ServeEngine.run: max_steps={max_steps} expired with "
+                f"{len(live)} live slot(s) and {len(self._queue)} queued "
+                "request(s); partial generations are returned with "
+                "done=False and resume on the next run() call",
+                RuntimeWarning, stacklevel=2)
+            finished.extend(live)
         return finished
 
     # ------------------------------------------------------------- internals
@@ -344,11 +380,11 @@ class ServeEngine:
 
 def greedy_generate(cfg: ModelConfig, params, prompt: np.ndarray,
                     n_new: int, kv_len: int = 256):
-    """Single-sequence greedy decode (library utility + tests)."""
+    """Single-sequence greedy decode (library utility + tests). Allocates
+    through the same :func:`alloc_decode_state` call as the engine — one
+    token per step, so ``slack=1`` is its prefill-chunk length."""
     fam = get_family(cfg.family)
-    specs = fam.decode_state_specs(cfg, prompt.shape[0], kv_len)
-    state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
-                         is_leaf=lambda x: isinstance(x, ParamSpec))
+    state = alloc_decode_state(fam, cfg, prompt.shape[0], kv_len, slack=1)
     step = jax.jit(lambda p, s, b: fam.decode_step(p, s, b, cfg))
     out = []
     tok = prompt[:, :1]

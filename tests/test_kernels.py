@@ -7,14 +7,17 @@ import pytest
 
 from repro.core import distributions as dist
 from repro.core import element as el
-from repro.core.nibble import pack_nibbles
+from repro.core.nibble import nibble_k_tile, pack_nibbles
 from repro.kernels.block_quant.block_quant import block_quant as bq_pallas
 from repro.kernels.block_quant.ref import block_quant_ref, block_dequant_ref
+from repro.kernels.dequant_matmul import tune
 from repro.kernels.dequant_matmul.dequant_matmul import \
     dequant_matmul as dqm_pallas
 from repro.kernels.dequant_matmul.dequant_matmul import \
     dequant_matmul_t as dqmt_pallas
-from repro.kernels.dequant_matmul.ref import (dequant_matmul_ref,
+from repro.kernels.dequant_matmul.ref import (dequant_matmul_decode_ref,
+                                              dequant_matmul_ref,
+                                              dequant_matmul_t_decode_ref,
                                               dequant_matmul_t_ref)
 
 CODEBOOKS = {
@@ -263,6 +266,232 @@ class TestTransposedDequantMatmul:
         got = dequant_matmul_t_ref(x, codes, scales, cb)
         np.testing.assert_allclose(np.asarray(got, np.float32), ref,
                                    rtol=2e-5, atol=2e-5)
+
+
+class TestDecodeVariantKernel:
+    """The small-M decode strategy (``variant="decode"``): direct
+    select-tree/gather dequant on the VPU with the block scale folded into
+    the accumulation, instead of the one-hot LUT matmul."""
+
+    @pytest.mark.parametrize("cb_name", ["int4", "t4_absmax", "int8"])
+    @pytest.mark.parametrize("M", [1, 8])
+    def test_matches_oracle(self, cb_name, M):
+        K, N = 256, 256
+        cb = jnp.asarray(CODEBOOKS[cb_name], jnp.float32)
+        x = rand((M, K), jnp.bfloat16, seed=hash((cb_name, M)) % 2**31)
+        codes, scales = block_quant_ref(rand((K, N), seed=41, scale=0.1), cb)
+        y_k = dqm_pallas(x, codes, scales, cb, interpret=True,
+                         variant="decode")
+        y_r = dequant_matmul_ref(x, codes, scales, cb)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+    def test_grid_accumulation_over_k(self):
+        """K spans multiple tiles under the decode body too."""
+        M, K, N = 8, 1024, 256
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((M, K), jnp.bfloat16, seed=42)
+        codes, scales = block_quant_ref(rand((K, N), seed=43, scale=0.1), cb)
+        y_k = dqm_pallas(x, pack_nibbles(codes), scales, cb, bits=4,
+                         interpret=True, variant="decode")
+        y_r = dequant_matmul_ref(x, pack_nibbles(codes), scales, cb, bits=4)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+    def test_bit_identical_across_storage(self):
+        """Decode body over nibble-packed vs uint8 codes: exact agreement
+        (the unpack restores the exact codes; the select tree then sees
+        identical inputs). K spans multiple interleave tiles."""
+        M, K, N = 8, 512, 256
+        cb = jnp.asarray(CODEBOOKS["t4_absmax"], jnp.float32)
+        x = rand((M, K), jnp.bfloat16, seed=44)
+        codes, scales = block_quant_ref(rand((K, N), seed=45, scale=0.1), cb)
+        y4 = dqm_pallas(x, pack_nibbles(codes), scales, cb, bits=4,
+                        interpret=True, variant="decode")
+        y8 = dqm_pallas(x, codes, scales, cb, bits=8, interpret=True,
+                        variant="decode")
+        np.testing.assert_array_equal(np.asarray(y4, np.float32),
+                                      np.asarray(y8, np.float32))
+
+    @pytest.mark.parametrize("cb_name", ["int4", "int8"])
+    def test_transposed_decode_variant(self, cb_name):
+        """Transposed decode body (scale folded into the output tile)."""
+        M, D, V = 3, 256, 512
+        cb = jnp.asarray(CODEBOOKS[cb_name], jnp.float32)
+        x = rand((M, D), jnp.bfloat16, seed=46)
+        codes, scales = block_quant_ref(rand((V, D), seed=47, scale=0.1), cb)
+        y_k = dqmt_pallas(x, codes, scales, cb, interpret=True,
+                          variant="decode")
+        y_r = dequant_matmul_t_ref(x, codes, scales, cb)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+    def test_transposed_bit_identical_across_storage(self):
+        M, D, V = 3, 256, 512
+        cb = jnp.asarray(CODEBOOKS["nf4"], jnp.float32)
+        x = rand((M, D), jnp.bfloat16, seed=48)
+        codes, scales = block_quant_ref(rand((V, D), seed=49, scale=0.1), cb)
+        y4 = dqmt_pallas(x, pack_nibbles(codes), scales, cb, bits=4,
+                         interpret=True, variant="decode")
+        y8 = dqmt_pallas(x, codes, scales, cb, bits=8, interpret=True,
+                         variant="decode")
+        np.testing.assert_array_equal(np.asarray(y4, np.float32),
+                                      np.asarray(y8, np.float32))
+
+    def test_variants_agree(self):
+        """Both strategies compute the same matmul (LUT to bf16-feed
+        tolerance): forcing either variant never changes semantics."""
+        M, K, N = 8, 512, 256
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((M, K), jnp.bfloat16, seed=50)
+        codes, scales = block_quant_ref(rand((K, N), seed=51, scale=0.1), cb)
+        y_d = dqm_pallas(x, codes, scales, cb, interpret=True,
+                         variant="decode")
+        y_l = dqm_pallas(x, codes, scales, cb, interpret=True, variant="lut")
+        np.testing.assert_allclose(np.asarray(y_d, np.float32),
+                                   np.asarray(y_l, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+
+class TestNonMultipleM:
+    """Regression: M need not divide the M tile — the wrappers pad with
+    zero rows and slice the output (e.g. a B·prefill_chunk = 192 chunk
+    used to trip ``assert M % tm == 0``)."""
+
+    @pytest.mark.parametrize("M", [5, 192])
+    def test_normal_pads_m(self, M):
+        K, N = 256, 256
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((M, K), jnp.bfloat16, seed=52)
+        codes, scales = block_quant_ref(rand((K, N), seed=53, scale=0.1), cb)
+        y_k = dqm_pallas(x, pack_nibbles(codes), scales, cb, bits=4,
+                         interpret=True)
+        assert y_k.shape == (M, N)
+        y_r = dequant_matmul_ref(x, pack_nibbles(codes), scales, cb, bits=4)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+    @pytest.mark.parametrize("M", [5, 192])
+    def test_transposed_pads_m(self, M):
+        D, V = 256, 512
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((M, D), jnp.bfloat16, seed=54)
+        codes, scales = block_quant_ref(rand((V, D), seed=55, scale=0.1), cb)
+        y_k = dqmt_pallas(x, codes, scales, cb, interpret=True)
+        assert y_k.shape == (M, V)
+        y_r = dequant_matmul_t_ref(x, codes, scales, cb)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+    def test_lead_dim_pads_m(self):
+        """MoE dispatch capacity not a tile multiple, batched lead dim."""
+        E, C, K, N = 2, 20, 256, 128
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((E, C, K), jnp.bfloat16, seed=56)
+        pairs = [block_quant_ref(rand((K, N), seed=60 + e, scale=0.1), cb)
+                 for e in range(E)]
+        codes = jnp.stack([c for c, _ in pairs])
+        scales = jnp.stack([s for _, s in pairs])
+        y_k = dqm_pallas(x, codes, scales, cb, interpret=True)
+        assert y_k.shape == (E, C, N)
+        y_r = dequant_matmul_ref(x, codes, scales, cb)
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=2e-2, atol=2e-1)
+
+
+class TestTuningTable:
+    def test_strategy_crossover(self):
+        """Decode strategy at serving M, LUT at prefill/training M."""
+        for M in (1, 4, 8):
+            assert tune.choose_tiles(M, 768, 2048, 4).decode, M
+        assert not tune.choose_tiles(4096, 768, 2048, 4).decode
+
+    def test_tiles_legal(self):
+        for (M, K, N, bits) in [(1, 768, 32768, 4), (192, 2048, 768, 4),
+                                (8, 512, 512, 8), (256, 768, 256, 8)]:
+            c = tune.choose_tiles(M, K, N, bits)
+            assert K % c.tk == 0 and N % c.tn == 0
+            assert c.tn % tune.BLOCK == 0
+            if bits == 4:
+                # layout-locked to the nibble interleave tile
+                assert c.tk == nibble_k_tile(K)
+
+    def test_register_overrides(self):
+        """A measured-sweep override wins over the analytic choice."""
+        key = (7, 256, 256, 8)       # geometry unlikely to matter elsewhere
+        forced = tune.TileChoice(8, 256, 128, False)
+        tune.register(*key, forced)
+        assert tune.choose_tiles(*key) == forced
+
+
+class TestDecodeRefs:
+    """The decode-shaped jnp oracles the CPU serving fallback dispatches
+    to: bit-identical to the plain refs for M ≥ 2 (full-K dots; panels
+    split only the output axis); M == 1 is padded for speed and agrees to
+    reassociation tolerance."""
+
+    @pytest.mark.parametrize("bits", [4, 8])
+    @pytest.mark.parametrize("M", [2, 4, 8])
+    def test_bit_identical_with_panels(self, bits, M):
+        K, N = 768, 8192             # narrow K ⇒ the N-panel path is live
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((M, K), seed=61)
+        codes, scales = block_quant_ref(rand((K, N), seed=62, scale=0.1), cb)
+        c = pack_nibbles(codes) if bits == 4 else codes
+        np.testing.assert_array_equal(
+            np.asarray(dequant_matmul_decode_ref(x, c, scales, cb,
+                                                 bits=bits), np.float32),
+            np.asarray(dequant_matmul_ref(x, c, scales, cb, bits=bits),
+                       np.float32))
+
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_m1_padded_close(self, bits):
+        K, N = 768, 8192
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((1, K), seed=63)
+        codes, scales = block_quant_ref(rand((K, N), seed=64, scale=0.1), cb)
+        c = pack_nibbles(codes) if bits == 4 else codes
+        np.testing.assert_allclose(
+            np.asarray(dequant_matmul_decode_ref(x, c, scales, cb,
+                                                 bits=bits), np.float32),
+            np.asarray(dequant_matmul_ref(x, c, scales, cb, bits=bits),
+                       np.float32), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("bits", [4, 8])
+    @pytest.mark.parametrize("M", [2, 4])
+    def test_transposed_bit_identical(self, bits, M):
+        V, D = 2048, 768             # M=4 panels along V; M=2 single piece
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        x = rand((M, D), seed=65)
+        codes, scales = block_quant_ref(rand((V, D), seed=66, scale=0.1), cb)
+        c = pack_nibbles(codes) if bits == 4 else codes
+        np.testing.assert_array_equal(
+            np.asarray(dequant_matmul_t_decode_ref(x, c, scales, cb,
+                                                   bits=bits), np.float32),
+            np.asarray(dequant_matmul_t_ref(x, c, scales, cb, bits=bits),
+                       np.float32))
+
+    def test_ops_dispatches_decode_shapes(self):
+        """The CPU fallback routes every 2-D call (decode rows and prefill
+        chunks alike) through the decode oracle — same values as the plain
+        oracle at M ≥ 2."""
+        from repro.kernels import ops
+        K, N = 256, 512
+        cb = jnp.asarray(CODEBOOKS["int4"], jnp.float32)
+        codes, scales = block_quant_ref(rand((K, N), seed=67, scale=0.1), cb)
+        for M in (2, 8, 32):
+            x = rand((M, K), seed=68)
+            np.testing.assert_array_equal(
+                np.asarray(ops.dequant_matmul(x, codes, scales, cb),
+                           np.float32),
+                np.asarray(dequant_matmul_ref(x, codes, scales, cb),
+                           np.float32))
 
 
 class TestOpsWrapper:

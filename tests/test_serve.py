@@ -63,6 +63,91 @@ class TestEngine:
         assert sum(x == y for x, y in zip(a, b)) >= 2
 
 
+class TestStepBudgetExpiry:
+    """``run(max_steps)`` expiring with live work must be loud (warning),
+    lossless (partials returned with ``done=False``), and resumable."""
+
+    def test_warns_returns_partials_and_resumes(self):
+        params = _params()
+        eng = ServeEngine(CFG, params, batch_slots=1, kv_len=32,
+                          prefill_chunk=4)
+        eng.submit(Request(prompt=[5, 9, 3, 7], max_new_tokens=6, rid=0))
+        with pytest.warns(RuntimeWarning, match="max_steps=2 expired"):
+            partial = eng.run(max_steps=2)
+        assert len(partial) == 1 and not partial[0].done
+        got = list(partial[0].tokens)
+        assert len(got) < 6
+        # a second run() continues the live slot to completion
+        done = eng.run()
+        assert len(done) == 1 and done[0].done
+        assert done[0].tokens[:len(got)] == got
+        ref = greedy_generate(CFG, params, np.asarray([[5, 9, 3, 7]]),
+                              n_new=6, kv_len=32)
+        assert done[0].tokens == list(ref[0])
+
+    def test_warns_when_queue_still_pending(self):
+        params = _params()
+        eng = ServeEngine(CFG, params, batch_slots=1, kv_len=32,
+                          prefill_chunk=4)
+        for rid in range(2):            # second request can never be seated
+            eng.submit(Request(prompt=[5, 9, 3], max_new_tokens=4, rid=rid))
+        with pytest.warns(RuntimeWarning, match="1 queued"):
+            eng.run(max_steps=3)
+
+    def test_no_warning_when_drained(self):
+        import warnings as _w
+        params = _params()
+        eng = ServeEngine(CFG, params, batch_slots=1, kv_len=32)
+        eng.submit(Request(prompt=[5, 9, 3], max_new_tokens=2, rid=0))
+        with _w.catch_warnings():
+            _w.simplefilter("error", RuntimeWarning)
+            done = eng.run()
+        assert len(done) == 1 and done[0].done
+
+
+class TestDecodeStateAlloc:
+    """Engine and :func:`greedy_generate` allocate decode state through the
+    one shared spec→zeros helper, so their cache geometry cannot drift."""
+
+    def test_engine_zero_state_matches_helper(self):
+        from repro.serve.engine import alloc_decode_state
+        params = _params()
+        eng = ServeEngine(CFG, params, batch_slots=2, kv_len=32,
+                          prefill_chunk=4)
+        fam = mapi.get_family(CFG.family)
+        helper = alloc_decode_state(fam, CFG, 2, 32, slack=4,
+                                    windowed=eng.windowed_cache)
+        a = jax.tree.map(lambda x: (x.shape, str(x.dtype)), eng._zero_state())
+        b = jax.tree.map(lambda x: (x.shape, str(x.dtype)), helper)
+        assert a == b
+
+    def test_slack_extends_cache(self):
+        """slack=chunk buys spill rows past kv_len (greedy_generate's
+        single-token steps need only slack=1)."""
+        from repro.serve.engine import alloc_decode_state
+        fam = mapi.get_family(CFG.family)
+        n = lambda s: sum(int(x.size) for x in jax.tree.leaves(
+            alloc_decode_state(fam, CFG, 1, 16, slack=s)))
+        assert n(8) > n(1)
+
+
+class TestWeightBytesCodebooks:
+    def test_codebook_bytes_track_stored_dtype(self, monkeypatch):
+        """Codebooks are sized at the dtype of the array the kernel reads,
+        not an assumed 4 bytes per codepoint."""
+        from repro.core import tensor_format
+        params = _params()
+        plan = build_plan(params, "babsmax32:n4")
+        eng = ServeEngine.from_quantised(CFG, plan.quantise(params), plan,
+                                         batch_slots=1, kv_len=16)
+        base = eng.weight_bytes()
+        assert base["codebooks"] > 0
+        orig = tensor_format.PackedTensor.codebook
+        monkeypatch.setattr(tensor_format.PackedTensor, "codebook",
+                            lambda self: orig(self).astype(jnp.bfloat16))
+        assert eng.weight_bytes()["codebooks"] * 2 == base["codebooks"]
+
+
 class TestPackedServing:
     """The tentpole: serve directly from packed quantised weights."""
 
