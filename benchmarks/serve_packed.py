@@ -43,15 +43,27 @@ are entirely cache-resident either way and cannot show the effect. The
 sweep feeds ``check()``: packed < f32 tokens/s at **any** swept batch size
 is a failure, as is any greedy-token divergence from the dense path.
 
+The module also runs the **fault drill** (``--fault-drill``): the serving
+robustness layer exercised end to end with real injected faults
+(``serve.faults``) — a corrupted scale/code in one named tensor must make
+``from_quantised`` reject the checkpoint naming that tensor; NaN logits
+injected into one slot must quarantine exactly that slot while every
+co-batched generation stays greedy-token-identical to an undisturbed
+engine; a persistent device-step failure must trigger the dense fallback
+and still produce identical tokens. Drill outcomes are recorded in
+``BENCH_serve.json`` (``fault_drill`` section) and any failed drill fails
+``check()``.
+
 Besides the usual results/bench row dump, this module writes the
 machine-readable ``BENCH_serve.json`` (tokens/s + resident weight bytes +
-per-family resident ratios + the per-batch sweep ratios) so the serving
-perf trajectory can be tracked across PRs. Run directly with ``--arch`` to
-restrict coverage, or ``--sweep-only`` for just the batch sweep (the
+per-family resident ratios + the per-batch sweep ratios + fault-drill
+outcomes) so the serving perf trajectory can be tracked across PRs. Run
+directly with ``--arch`` to restrict coverage, or ``--sweep-only`` /
+``--fault-drill`` for those modes alone (together they form the
 ``run_tests.sh --bench-smoke`` target):
 
     PYTHONPATH=src python -m benchmarks.serve_packed --arch rwkv6,whisper
-    PYTHONPATH=src python -m benchmarks.serve_packed --sweep-only
+    PYTHONPATH=src python -m benchmarks.serve_packed --sweep-only --fault-drill
 """
 from __future__ import annotations
 
@@ -268,6 +280,103 @@ def run_batch_sweep(fast: bool = True, batches=None, reps=None):
     return rows
 
 
+DRILL_FMT = "babsmax32:n4"       # 4-bit nibble-packed: scale faults
+DRILL_FMT_8BIT = "babsmax32:n5"  # 32-codepoint uint8 codes: range faults
+
+
+def run_fault_drill(fast: bool = True):
+    """Drill the serving robustness layer with real injected faults; one
+    row per drill (``path="fault_drill/<name>"``) carrying the ``ok`` bit
+    ``check()`` enforces. Greedy decode throughout, so recovery claims are
+    exact token comparisons against undisturbed engines, not tolerances."""
+    import warnings
+
+    from repro.core import IntegrityError
+    from repro.serve import faults
+
+    variant = "smoke" if fast else "small"
+    cfg = configs.get_config("paper-100m", variant).replace(
+        dtype="float32", param_dtype="float32")
+    fam = mapi.get_family(cfg.family)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    eng_kw = dict(batch_slots=3, kv_len=64, prefill_chunk=4)
+    rows = []
+
+    def drill(name, ok, **detail):
+        rows.append(dict(path=f"fault_drill/{name}", ok=bool(ok), **detail))
+        print(f"[fault-drill] {name}: {'ok' if ok else 'FAIL'} {detail}")
+
+    # -- checkpoint integrity: corruption must be rejected BY TENSOR NAME
+    # scale-word fault on the 4-bit nibble-packed checkpoint (code-range
+    # checks cannot see nibble faults — every nibble is a valid <16 code)
+    plan4 = build_plan(params, DRILL_FMT)
+    q4 = plan4.quantise(params)
+    tensor = faults.packed_paths(q4)[0]
+    try:
+        ServeEngine.from_quantised(
+            cfg, faults.corrupt_scales(q4, tensor), plan4, **eng_kw)
+        drill("integrity_scales", False, tensor=tensor, fmt=DRILL_FMT,
+              error="checkpoint accepted")
+    except IntegrityError as e:
+        drill("integrity_scales", tensor in str(e), tensor=tensor,
+              fmt=DRILL_FMT, error=str(e)[:160])
+    # code-range fault on an 8-bit-stored checkpoint (32-point codebook):
+    # byte 0xFF is outside every codebook this plan declares
+    plan8 = build_plan(params, DRILL_FMT_8BIT)
+    q8 = plan8.quantise(params)
+    try:
+        ServeEngine.from_quantised(
+            cfg, faults.corrupt_codes(q8, tensor), plan8, **eng_kw)
+        drill("integrity_codes", False, tensor=tensor, fmt=DRILL_FMT_8BIT,
+              error="checkpoint accepted")
+    except IntegrityError as e:
+        drill("integrity_codes", tensor in str(e), tensor=tensor,
+              fmt=DRILL_FMT_8BIT, error=str(e)[:160])
+
+    # -- slot quarantine: NaN logits on slot 0 must evict ONLY slot 0;
+    # survivors must match an undisturbed engine token for token
+    reqs = [Request(prompt=[1 + r, 2, 3, 4], max_new_tokens=8, rid=r)
+            for r in range(3)]
+    eng_ref = ServeEngine.from_quantised(cfg, q4, plan4, **eng_kw)
+    eng_hit = ServeEngine.from_quantised(cfg, q4, plan4, **eng_kw)
+    for eng in (eng_ref, eng_hit):
+        for r in reqs:
+            eng.submit(Request(prompt=list(r.prompt),
+                               max_new_tokens=r.max_new_tokens, rid=r.rid))
+    ctr = faults.inject_nan_logits(eng_hit, slot=0, at_step=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        ref = {g.rid: g for g in eng_ref.run()}
+        hit = {g.rid: g for g in eng_hit.run()}
+    failed = [g for g in hit.values() if g.failed]
+    survivors_ok = all(g.tokens == ref[g.rid].tokens
+                       for g in hit.values() if not g.failed)
+    prefix_ok = all(g.tokens == ref[g.rid].tokens[:len(g.tokens)]
+                    for g in failed)
+    drill("quarantine_nan_slot",
+          ctr["injected"] == 1 and len(failed) == 1 and len(hit) == len(ref)
+          and survivors_ok and prefix_ok,
+          injected=ctr["injected"], n_failed=len(failed),
+          failed_rids=[g.rid for g in failed],
+          survivors_identical=survivors_ok, failed_is_prefix=prefix_ok)
+
+    # -- degraded mode: a persistent step failure on packed weights must
+    # flip to dense and keep serving, tokens identical to undisturbed
+    eng_ref = ServeEngine.from_quantised(cfg, q4, plan4, **eng_kw)
+    eng_hit = ServeEngine.from_quantised(cfg, q4, plan4, **eng_kw)
+    for eng in (eng_ref, eng_hit):
+        eng.submit(Request(prompt=[5, 6, 7], max_new_tokens=8, rid=0))
+    faults.inject_step_failures(eng_hit, {1})
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        a = eng_ref.run()[0].tokens
+        b = eng_hit.run()[0].tokens
+    drill("degraded_fallback",
+          eng_hit.degraded and a == b and not eng_hit._has_packed(),
+          degraded=eng_hit.degraded, tokens_identical=a == b)
+    return rows
+
+
 def run(fast: bool = True, archs=None, sweep: bool = True):
     rng = np.random.default_rng(0)
     table = _family_table(fast)
@@ -295,11 +404,13 @@ def _write_bench_serve(rows):
     plus a per-family packed-vs-f32 resident ratio (comparable across
     architectures thanks to the codes/scales/codebooks breakdown) and the
     decode batch sweep (``batch_sweep``: per batch size, packed and f32
-    tokens/s and their ratio on the full paper-100m config). A subset run
-    (``--arch`` / ``--sweep-only``) merges into the existing record so
-    other entries survive."""
+    tokens/s and their ratio on the full paper-100m config) and the fault
+    drill (``fault_drill``: per drill, the ``ok`` bit + detail). A subset
+    run (``--arch`` / ``--sweep-only`` / ``--fault-drill``) merges into
+    the existing record so other entries survive."""
     rec = {"bench": "serve_packed", "paths": {},
-           "resident_ratio_vs_f32": {}, "batch_sweep": {}}
+           "resident_ratio_vs_f32": {}, "batch_sweep": {},
+           "fault_drill": {}}
     if os.path.exists(BENCH_SERVE_OUT):
         try:
             with open(BENCH_SERVE_OUT) as f:
@@ -309,6 +420,7 @@ def _write_bench_serve(rows):
                 rec["resident_ratio_vs_f32"].update(
                     old.get("resident_ratio_vs_f32", {}))
                 rec["batch_sweep"].update(old.get("batch_sweep", {}))
+                rec["fault_drill"].update(old.get("fault_drill", {}))
         except (json.JSONDecodeError, OSError):
             pass
     for r in rows:
@@ -316,6 +428,9 @@ def _write_bench_serve(rows):
             tag = r["path"].split("/")[1]
             rec["batch_sweep"].setdefault(tag, {})[str(r["batch"])] = {
                 k: v for k, v in r.items() if k not in ("path", "batch")}
+        elif r["path"].startswith("fault_drill/"):
+            rec["fault_drill"][r["path"].split("/", 1)[1]] = {
+                k: v for k, v in r.items() if k != "path"}
         elif "tokens_per_s" in r:
             rec["paths"][r["path"]] = {
                 k: v for k, v in r.items() if k != "path"}
@@ -365,8 +480,14 @@ def check(rows):
         if not r["tokens_identical"]:
             fails.append(f"{r['path']}: packed and dense engines disagree "
                          "on greedy tokens")
+    # fault drill: every injected-fault recovery must have worked
+    for r in rows:
+        if r["path"].startswith("fault_drill/") and not r["ok"]:
+            fails.append(f"{r['path']}: drill failed "
+                         f"({r.get('error', r)})")
     by = {r["path"]: r for r in rows}
-    tags = {r["path"].split("/")[0] for r in rows} - {"sweep"}
+    tags = ({r["path"].split("/")[0] for r in rows}
+            - {"sweep", "fault_drill"})
     for tag in sorted(tags):
         if not by[f"{tag}/tokens_identical"]["value"]:
             fails.append(f"{tag}: packed and dense engines disagree on "
@@ -410,12 +531,21 @@ if __name__ == "__main__":
                          "(all batch points, more timed reps)")
     ap.add_argument("--sweep-only", action="store_true",
                     help="run only the decode batch sweep + its ratio check "
-                         "(the run_tests.sh --bench-smoke target)")
+                         "(part of the run_tests.sh --bench-smoke target)")
+    ap.add_argument("--fault-drill", action="store_true",
+                    help="run the serving fault drill (injected checkpoint "
+                         "corruption / NaN slot / step failure; recovery "
+                         "recorded in BENCH_serve.json and enforced by "
+                         "check()); combines with --sweep-only")
     ap.add_argument("--no-sweep", action="store_true",
                     help="family rows only, skip the decode batch sweep")
     args = ap.parse_args()
-    if args.sweep_only:
-        rows = run_batch_sweep(fast=not args.full)
+    if args.sweep_only or args.fault_drill:
+        rows = []
+        if args.sweep_only:
+            rows += run_batch_sweep(fast=not args.full)
+        if args.fault_drill:
+            rows += run_fault_drill(fast=not args.full)
         write_rows("serve_packed_sweep", rows)
         _write_bench_serve(rows)
     else:

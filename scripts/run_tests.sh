@@ -19,12 +19,19 @@
 #                                   (ring vs masked-full-cache greedy
 #                                   parity, wrap-crossing prefill, cache
 #                                   accounting)
+#   scripts/run_tests.sh --faults   serving fault-tolerance tests only
+#                                   (checkpoint integrity rejection, slot
+#                                   quarantine + survivor parity, deadlines,
+#                                   watchdog, step retry, dense fallback,
+#                                   admission faults)
 #   scripts/run_tests.sh --bench-smoke
 #                                   smallest decode batch sweep (full-size
-#                                   paper-100m, reduced batch points/reps):
-#                                   enforces packed ≥ f32 tokens/s at every
-#                                   swept batch size with identical greedy
-#                                   tokens; exits non-zero on violation
+#                                   paper-100m, reduced batch points/reps)
+#                                   plus the fault drill: enforces packed ≥
+#                                   f32 tokens/s at every swept batch size
+#                                   with identical greedy tokens, and that
+#                                   every injected-fault recovery worked;
+#                                   exits non-zero on violation
 #   scripts/run_tests.sh [pytest args...]   extra args forwarded to pytest
 #
 # Works offline: tests/conftest.py shims `hypothesis` when it is missing.
@@ -43,14 +50,18 @@ fi
 if [ "${1:-}" = "--serve" ]; then
     shift
     exec python -m pytest -q tests/test_serve.py tests/test_serve_ragged.py \
-        tests/test_serve_windowed.py "$@"
+        tests/test_serve_windowed.py tests/test_serve_faults.py "$@"
 fi
 if [ "${1:-}" = "--windowed" ]; then
     shift
     exec python -m pytest -q tests/test_serve_windowed.py "$@"
 fi
+if [ "${1:-}" = "--faults" ]; then
+    shift
+    exec python -m pytest -q tests/test_serve_faults.py "$@"
+fi
 if [ "${1:-}" = "--bench-smoke" ]; then
     shift
-    exec python -m benchmarks.serve_packed --sweep-only "$@"
+    exec python -m benchmarks.serve_packed --sweep-only --fault-drill "$@"
 fi
 exec python -m pytest -q -m "not slow" "$@"

@@ -19,13 +19,15 @@ from . import (allocation, compress, distributions, element, fisher, lloyd,
                metrics, plan, registry, rotations, scaling, search, sparse,
                tensor_format)
 from .registry import parse_format, HEADLINE_FORMATS
-from .tensor_format import TensorFormat, QuantisedTensor, PackedTensor
-from .plan import QuantisationPlan, build_plan, build_allocated_plan
+from .tensor_format import (IntegrityError, TensorFormat, QuantisedTensor,
+                            PackedTensor)
+from .plan import (QuantisationPlan, build_plan, build_allocated_plan,
+                   verify_packed_tree)
 
 __all__ = [
     "allocation", "compress", "distributions", "element", "fisher", "lloyd",
     "metrics", "plan", "registry", "rotations", "scaling", "search", "sparse",
-    "tensor_format", "parse_format", "HEADLINE_FORMATS", "TensorFormat",
-    "QuantisedTensor", "PackedTensor", "QuantisationPlan", "build_plan",
-    "build_allocated_plan",
+    "tensor_format", "parse_format", "HEADLINE_FORMATS", "IntegrityError",
+    "TensorFormat", "QuantisedTensor", "PackedTensor", "QuantisationPlan",
+    "build_plan", "build_allocated_plan", "verify_packed_tree",
 ]

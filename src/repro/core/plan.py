@@ -143,6 +143,17 @@ class QuantisationPlan:
             lambda x: x.dequantise() if isinstance(x, PackedTensor) else x,
             packed, is_leaf=lambda x: isinstance(x, PackedTensor))
 
+    def verify_packed(self, packed) -> int:
+        """Integrity-validate every :class:`PackedTensor` leaf of a packed
+        checkpoint (``pack``/``pack_quantised`` output) — codes within the
+        codebook range, nibble/K-dim layout consistency, finite scales and
+        codebooks, shape agreement (``PackedTensor.verify``). Raises
+        :class:`~repro.core.tensor_format.IntegrityError` naming the tensor
+        path of the first violation; returns the number of leaves checked.
+        ``ServeEngine.from_quantised`` runs this at load (its
+        ``validate=False`` escape hatch skips it)."""
+        return verify_packed_tree(packed)
+
     # -- accounting -----------------------------------------------------------
     def bits_per_param(self, params, measured: bool = False,
                        keep_bits: float = 16.0) -> float:
@@ -158,6 +169,20 @@ class QuantisationPlan:
                 total_bits += f.bits_per_param(x.shape) * n
             total_n += n
         return total_bits / max(total_n, 1)
+
+
+def verify_packed_tree(packed) -> int:
+    """Free-function form of :meth:`QuantisationPlan.verify_packed` (the
+    checks only need the tensors, not the plan): walk a params tree and
+    ``verify()`` every PackedTensor leaf, naming its path on failure."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        packed, is_leaf=lambda x: isinstance(x, PackedTensor))
+    n = 0
+    for p, leaf in flat:
+        if isinstance(leaf, PackedTensor):
+            leaf.verify(name=path_str(p))
+            n += 1
+    return n
 
 
 def quantisable(name: str, x, min_ndim: int = 2,

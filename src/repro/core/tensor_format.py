@@ -38,6 +38,16 @@ def ste(x: jnp.ndarray, x_hat: jnp.ndarray) -> jnp.ndarray:
     return x + jax.lax.stop_gradient(x_hat - x)
 
 
+class IntegrityError(ValueError):
+    """A packed checkpoint tensor failed integrity validation.
+
+    Block-scaled formats are absmax-sensitive: one flipped scale or
+    out-of-range code decodes to unbounded garbage that silently poisons
+    every co-batched generation, so the serving path validates packed
+    tensors at load (``ServeEngine.from_quantised(validate=True)``) and
+    fails fast naming the offending tensor path instead."""
+
+
 @jax.tree_util.register_dataclass
 @dataclass
 class QuantisedTensor:
@@ -124,6 +134,66 @@ class PackedTensor:
         vals = self.codebook()[self.unpacked_codes().astype(jnp.int32)]
         s = jnp.repeat(self.scales.astype(jnp.float32), self.block, axis=-1)
         return (vals * s).reshape(self.shape).astype(self.dtype)
+
+    def verify(self, name: str = "") -> None:
+        """Integrity-check this packed tensor; raise :class:`IntegrityError`
+        naming ``name`` (the tensor path) on the first violation.
+
+        Checks the properties the fused ``dequant_matmul`` path assumes but
+        never re-validates at decode time: codes stored as uint8 within the
+        codebook's range, nibble-parity/K-dim consistency between the byte
+        layout and the logical shape (``prod(shape) == lead · K · N``,
+        scales exactly ``(*lead, K, N // block)`` with ``block`` tiling N),
+        and finite scales + codebook. A violated invariant decodes to
+        unbounded garbage (absmax block scaling amplifies it), so callers
+        should validate once at load rather than trust the stream."""
+        tag = f"packed tensor {name or '<unnamed>'}"
+
+        def fail(msg):
+            raise IntegrityError(f"{tag}: {msg}")
+
+        if self.bits not in (4, 8):
+            fail(f"unsupported storage width bits={self.bits}")
+        if jnp.dtype(self.codes.dtype) != jnp.uint8:
+            fail(f"codes stored as {self.codes.dtype}, expected uint8")
+        n_codes = len(self.codepoints)
+        if n_codes == 0:
+            fail("empty codebook")
+        if n_codes > (16 if self.bits == 4 else 256):
+            fail(f"codebook of {n_codes} points does not fit "
+                 f"{self.bits}-bit codes")
+        if self.codes.ndim < 2:
+            fail(f"codes must be (*lead, K{'//2' if self.bits == 4 else ''},"
+                 f" N), got {self.codes.shape}")
+        lead = tuple(self.codes.shape[:-2])
+        K, N = self.k_dim, int(self.codes.shape[-1])
+        numel = int(np.prod(lead)) * K * N
+        if int(np.prod(self.shape)) != numel:
+            fail(f"codes layout {self.codes.shape} (bits={self.bits}: "
+                 f"K={K}, N={N}) holds {numel} codes but the logical shape "
+                 f"{self.shape} has {int(np.prod(self.shape))} elements")
+        if self.out_shape and int(np.prod(self.out_shape)) != N:
+            fail(f"out_shape {self.out_shape} disagrees with the codes "
+                 f"output dim N={N}")
+        if self.block <= 0 or N % self.block != 0:
+            fail(f"output dim N={N} does not tile by the scale block "
+                 f"{self.block}")
+        expect = lead + (K, N // self.block)
+        if tuple(self.scales.shape) != expect:
+            fail(f"scales shape {tuple(self.scales.shape)} disagrees with "
+                 f"the codes layout (expected {expect})")
+        cb = np.asarray(self.codebook(), np.float32)
+        if not np.isfinite(cb).all():
+            fail(f"non-finite codebook "
+                 f"({int((~np.isfinite(cb)).sum())} of {cb.size} entries)")
+        s = np.asarray(self.scales, np.float32)
+        if not np.isfinite(s).all():
+            fail(f"non-finite block scales "
+                 f"({int((~np.isfinite(s)).sum())} of {s.size} entries)")
+        c = np.asarray(self.unpacked_codes())
+        cmax = int(c.max()) if c.size else 0
+        if cmax >= n_codes:
+            fail(f"code {cmax} out of codebook range [0, {n_codes})")
 
 
 @dataclass(frozen=True)

@@ -50,6 +50,23 @@ def main(argv=None):
                     help="disable the rolling-window ring allocation for "
                          "local-attention layer groups and serve from the "
                          "masked full-length baseline layout")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="with --packed: skip the load-time integrity pass "
+                         "over the packed checkpoint (trusted-checkpoint "
+                         "escape hatch; by default corruption raises "
+                         "IntegrityError naming the tensor)")
+    ap.add_argument("--step-retries", type=int, default=1,
+                    help="re-run a transiently failing device step up to "
+                         "this many total attempts before degrading "
+                         "(1 = no retry)")
+    ap.add_argument("--no-dense-fallback", action="store_true",
+                    help="let a persistent device-step failure propagate "
+                         "instead of dequantising packed weights and "
+                         "continuing in degraded mode")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="wall-clock watchdog for the whole run(): on "
+                         "expiry, return resumable partial generations "
+                         "instead of hanging on a stalled engine")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch, args.variant)
@@ -72,7 +89,10 @@ def main(argv=None):
                 cfg, plan.quantise(params), plan, batch_slots=args.slots,
                 kv_len=args.kv_len, prefill_chunk=args.prefill_chunk,
                 strict_admission=not args.relaxed_admission,
-                windowed_cache=not args.uniform_cache)
+                windowed_cache=not args.uniform_cache,
+                validate=not args.no_validate,
+                step_retries=args.step_retries,
+                dense_fallback=not args.no_dense_fallback)
             wb = eng.weight_bytes()
             if wb["packed"] == 0:
                 # the family has layouts but the format rejected every
@@ -98,7 +118,9 @@ def main(argv=None):
                           kv_len=args.kv_len,
                           prefill_chunk=args.prefill_chunk,
                           strict_admission=not args.relaxed_admission,
-                          windowed_cache=not args.uniform_cache)
+                          windowed_cache=not args.uniform_cache,
+                          step_retries=args.step_retries,
+                          dense_fallback=not args.no_dense_fallback)
     cb = eng.cache_bytes()
     if cb["kv"] < cb["uniform_kv"]:
         print(f"[serve] decode cache {cb['kv']:,} bytes "
@@ -113,15 +135,19 @@ def main(argv=None):
         eng.submit(Request(prompt=prompt, max_new_tokens=args.max_new,
                            rid=rid))
     t0 = time.time()
-    done = eng.run()
+    done = eng.run(deadline_s=args.deadline_s)
     dt = time.time() - t0
     n_tok = sum(len(g.tokens) for g in done)
     n_trunc = sum(g.truncated for g in done)
+    n_failed = sum(g.failed for g in done)
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / max(dt, 1e-9):.1f} tok/s)"
-          + (f", {n_trunc} truncated at the KV budget" if n_trunc else ""))
+          + (f", {n_trunc} truncated at the KV budget" if n_trunc else "")
+          + (f", {n_failed} quarantined" if n_failed else "")
+          + (", degraded to dense" if eng.degraded else ""))
     for g in done[:4]:
-        print(f"  rid={g.rid} tokens={g.tokens}")
+        print(f"  rid={g.rid} tokens={g.tokens}"
+              + (f" FAILED: {g.fail_reason}" if g.failed else ""))
     return done
 
 

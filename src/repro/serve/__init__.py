@@ -94,10 +94,54 @@ Components
     and 0.23× cache — greedy tokens identical to the dense path in every
     family.
 
+The robustness layer
+--------------------
+Serving on aggressively quantised weights concentrates failure into two
+sharp modes — a corrupted packed stream decodes to unbounded garbage
+(absmax block scales amplify a single flipped word), and a poisoned slot
+NaNs its logits — so fault tolerance is part of the serving path, not an
+afterthought. Every recovery path below has a deterministic injector in
+``serve.faults`` and is drilled by ``tests/test_serve_faults.py`` and
+``benchmarks/serve_packed.py --fault-drill``:
+
+* **Load-time integrity** — ``ServeEngine.from_quantised(validate=True)``
+  runs ``QuantisationPlan.verify_packed`` over the packed checkpoint:
+  codes within the codebook range, nibble-parity/K-dim layout consistency,
+  finite scales/codebooks, shape agreement with the declared pack layouts.
+  A violation raises ``repro.core.IntegrityError`` **naming the tensor
+  path** — fail fast at load beats serving garbage to every co-batched
+  request. ``validate=False`` is the trusted-checkpoint escape hatch.
+* **Slot quarantine** — non-finite logits evict only the offending slot:
+  its ``Generation`` returns ``failed=True`` with partial tokens and a
+  ``fail_reason``, its state is wiped through the same ``batch["reset"]``
+  protocol admission uses, and every other slot keeps decoding
+  bit-identically (per-slot state independence is the ragged path's
+  invariant). ``Request.deadline_steps`` quarantines runaway requests the
+  same way; ``run(deadline_s=...)`` is the wall-clock watchdog that turns
+  a stalled engine into resumable partials.
+* **Step retry + degraded mode** — transient device-step failures re-run
+  through the shared ``train.fault_tolerance.retry`` helper
+  (``ServeEngine(step_retries=N)``); a failure that survives retry on
+  packed weights triggers the one-time dense fallback
+  (``degrade_to_dense``): every PackedTensor leaf is dequantised, one
+  RuntimeWarning fires, and the engine keeps serving — the runtime
+  analogue of the ``windowed_cache=False`` layout kill-switch.
+* **Admission hygiene** — ``submit`` rejects empty prompts and
+  ``max_new_tokens <= 0`` up front, and warns on duplicate rids (sampling
+  seeds per ``(rid, token index)``, so colliding rids silently draw
+  identical streams).
+
 ``cache``
     The decode-cache subsystem: ``CacheSpec``/``CacheGroup`` geometry,
     ring-buffer index math (slot mapping + position reconstruction), and
     ``cache_bytes()`` accounting with the uniform baseline.
+
+``faults``
+    The fault-injection harness behind the drills above: checkpoint
+    corruption (``corrupt_codes``/``corrupt_scales``/``corrupt_layout``),
+    per-slot NaN logits, device-step failures and stalls, and admission
+    drop/duplicate faults — each returning counter state so tests assert
+    the fault actually fired.
 
 ``context_parallel``
     Flash-decode attention over a sequence-sharded KV cache (exact
@@ -111,9 +155,10 @@ The rest (the MoE router, formats with sparse outliers or tensor/channel
 scaling, tensors whose output dim does not tile by the block — e.g.
 zamba2's 548-wide in_proj in smoke) are dequantised at load.
 """
-from . import cache, context_parallel, engine  # noqa: F401
+from . import cache, context_parallel, engine, faults  # noqa: F401
 from .cache import CacheGroup, CacheSpec, build_cache_spec
 from .engine import Request, ServeEngine, greedy_generate
 
-__all__ = ["cache", "context_parallel", "engine", "CacheGroup", "CacheSpec",
-           "build_cache_spec", "Request", "ServeEngine", "greedy_generate"]
+__all__ = ["cache", "context_parallel", "engine", "faults", "CacheGroup",
+           "CacheSpec", "build_cache_spec", "Request", "ServeEngine",
+           "greedy_generate"]

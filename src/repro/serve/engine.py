@@ -20,9 +20,31 @@ observes its predecessor's state. Encoder-decoder families additionally get
 per-slot cross-attention prefill: ``ModelFamily.cross_prefill`` runs once
 per admitted request (on its ``Request.frames``, or zeroing the slot when
 absent) and is scattered into that slot's state rows.
+
+Fault tolerance (the serving robustness layer; drills in ``serve.faults``):
+
+* **slot quarantine** — a slot whose emitted logits go non-finite is
+  evicted alone (``Generation.failed`` + reason, state wiped via the
+  ``batch["reset"]`` protocol) and the wave keeps decoding; co-batched
+  generations are unaffected (per-slot state independence).
+* **per-request deadlines** — ``Request.deadline_steps`` bounds how many
+  engine steps a request may occupy a slot; exceeding it quarantines the
+  request instead of letting one runaway generation starve admission.
+* **watchdog** — ``run(deadline_s=...)`` bounds wall-clock: an engine
+  stalled by slow steps returns resumable partials instead of hanging.
+* **step retry + degraded mode** — transient device-step failures re-run
+  through the shared ``train.fault_tolerance.retry`` helper
+  (``step_retries``); a persistent failure on packed weights triggers the
+  one-time dense fallback (``dense_fallback``): every PackedTensor leaf is
+  dequantised and the engine keeps serving, mirroring the
+  ``windowed_cache=False`` kill-switch pattern.
+* **load-time integrity** — ``from_quantised(validate=True)`` runs
+  ``QuantisationPlan.verify_packed`` over the packed checkpoint and fails
+  fast naming the corrupted tensor path (``validate=False`` opts out).
 """
 from __future__ import annotations
 
+import time
 import warnings
 from dataclasses import dataclass, field
 from typing import List, Optional
@@ -33,6 +55,7 @@ import numpy as np
 
 from repro.core.tensor_format import PackedTensor
 from repro.models.api import ModelConfig, ParamSpec, get_family
+from repro.train.fault_tolerance import StragglerMonitor, retry
 
 
 def alloc_decode_state(fam, cfg: ModelConfig, batch_slots: int, kv_len: int,
@@ -61,6 +84,11 @@ class Request:
     # frame embeddings for whisper), encoded once at slot admission via
     # ModelFamily.cross_prefill. None = text-only (zero cross KV).
     frames: Optional[np.ndarray] = None
+    # per-request deadline: max engine steps this request may occupy a slot
+    # (prefill chunks + decode steps). Exceeding it quarantines the request
+    # (Generation.failed, partial tokens kept) so one runaway generation
+    # can never starve admission. None = no deadline.
+    deadline_steps: Optional[int] = None
 
 
 @dataclass
@@ -71,6 +99,10 @@ class Generation:
     # the request hit the KV budget before max_new_tokens (only reachable
     # with strict_admission=False — strict engines reject such requests)
     truncated: bool = False
+    # the request was quarantined (non-finite logits, deadline exceeded):
+    # partial tokens are kept, done stays False, and fail_reason says why
+    failed: bool = False
+    fail_reason: str = ""
 
 
 class ServeEngine:
@@ -98,11 +130,22 @@ class ServeEngine:
     identical with or without the windowed allocation. With
     ``strict_admission=False`` such requests are admitted and end early
     with ``Generation.truncated`` set instead.
+
+    Fault tolerance: ``step_retries`` re-runs a failed device step through
+    the shared :func:`repro.train.fault_tolerance.retry` helper (1 = no
+    retry); a failure that survives retry on an engine holding packed
+    weights triggers the one-time **dense fallback** (``dense_fallback``,
+    default True): every PackedTensor leaf is dequantised, a single
+    RuntimeWarning fires, and serving continues — disable it to let the
+    failure propagate. Non-finite logits quarantine only the offending
+    slot (see :meth:`run`); ``straggler`` records per-step wall times
+    (:class:`~repro.train.fault_tolerance.StragglerMonitor`).
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
                  kv_len: int = 256, prefill_chunk: int = 8,
-                 strict_admission: bool = True, windowed_cache: bool = True):
+                 strict_admission: bool = True, windowed_cache: bool = True,
+                 step_retries: int = 1, dense_fallback: bool = True):
         self.cfg = cfg
         self.fam = get_family(cfg.family)
         if not getattr(self.fam, "supports_ragged", False):
@@ -111,19 +154,27 @@ class ServeEngine:
                 "serving protocol (supports_ragged) — per-slot positions, "
                 "t_valid chunks and the reset mask are required to serve; "
                 "see ModelFamily in repro.models.api")
+        if step_retries < 1:
+            raise ValueError(f"step_retries must be >= 1, got {step_retries}")
         self.params = params
         self.B = batch_slots
         self.kv_len = kv_len
         self.prefill_chunk = max(1, prefill_chunk)
         self.strict_admission = strict_admission
         self.windowed_cache = windowed_cache
+        self.step_retries = step_retries
+        self.dense_fallback = dense_fallback
+        self.degraded = False     # dense fallback engaged (degrade_to_dense)
+        self.straggler = StragglerMonitor()
         self._state = self._zero_state()
         self._slots: List[Optional[Generation]] = [None] * batch_slots
         self._queue: List[Request] = []
         self._slot_pos = np.zeros(batch_slots, np.int32)
+        self._slot_steps = np.zeros(batch_slots, np.int64)  # deadline clock
         self._slot_prompt: List[List[int]] = [[] for _ in range(batch_slots)]
         # slots admitted since the last step: their first step carries
         # batch["reset"] so the jitted step wipes the predecessor's state
+        # (quarantine raises the same bit to wipe a poisoned slot)
         self._needs_reset = np.zeros(batch_slots, bool)
         self._step = jax.jit(
             lambda p, s, b: self.fam.decode_step(p, s, b, self.cfg))
@@ -134,7 +185,7 @@ class ServeEngine:
 
     @classmethod
     def from_quantised(cls, cfg: ModelConfig, qparams, plan,
-                       packed: bool = True, **kw):
+                       packed: bool = True, validate: bool = True, **kw):
         """Build an engine from a quantised checkpoint.
 
         ``packed=True`` (default) keeps every packable planned tensor in its
@@ -147,7 +198,18 @@ class ServeEngine:
         no matmul layout for (or whose format is not block-scaled ≤8-bit)
         are dequantised. A family whose ``pack_layouts`` is empty (the
         explicit cannot-pack declaration) raises immediately rather than
-        silently serving dense — pass ``packed=False`` to opt into that."""
+        silently serving dense — pass ``packed=False`` to opt into that.
+
+        ``validate=True`` (default) integrity-checks every packed tensor at
+        load (``QuantisationPlan.verify_packed``: codes within the codebook
+        range, nibble/K-dim layout consistency, finite scales/codebooks,
+        shape agreement) and raises
+        :class:`~repro.core.tensor_format.IntegrityError` naming the
+        corrupted tensor path — block-scaled formats decode a flipped scale
+        or stray code to unbounded garbage, so a bad checkpoint must fail
+        fast instead of poisoning every co-batched generation.
+        ``validate=False`` is the escape hatch (trusted checkpoint,
+        load-latency-critical path)."""
         if packed:
             layouts = get_family(cfg.family).pack_layouts(cfg)
             if not layouts:
@@ -156,6 +218,8 @@ class ServeEngine:
                     "no tensor can serve packed; pass packed=False to serve "
                     "dequantised dense weights")
             params = plan.pack_quantised(qparams, layouts)
+            if validate:
+                plan.verify_packed(params)
         else:
             params = plan.dequantise(qparams)
         return cls(cfg, params, **kw)
@@ -234,7 +298,34 @@ class ServeEngine:
         wrap at ``pos % length`` and can never overflow, so their (much
         smaller) allocation never constrains admission — a request that
         fits the global caches is admissible regardless of how far past
-        any local window it runs."""
+        any local window it runs.
+
+        Malformed requests are rejected here, not mid-decode: an empty
+        prompt (there is no token to decode from) and ``max_new_tokens <=
+        0`` (the generation could never finish) raise ``ValueError``. A
+        ``rid`` colliding with a queued or live request warns: sampling
+        seeds from ``(rid, token index)``, so colliding rids silently draw
+        identical streams."""
+        if not req.prompt:
+            raise ValueError(
+                f"request rid={req.rid}: empty prompt — at least one token "
+                "is required to decode from")
+        if req.max_new_tokens <= 0:
+            raise ValueError(
+                f"request rid={req.rid}: max_new_tokens="
+                f"{req.max_new_tokens} must be >= 1")
+        if req.deadline_steps is not None and req.deadline_steps < 1:
+            raise ValueError(
+                f"request rid={req.rid}: deadline_steps="
+                f"{req.deadline_steps} must be >= 1 (or None)")
+        active = {r.rid for r in self._queue} | {
+            g.rid for g in self._slots if g is not None}
+        if req.rid in active:
+            warnings.warn(
+                f"submit: rid={req.rid} collides with a queued or live "
+                "request — sampling seeds per (rid, token index), so the "
+                "two streams will be identical at temperature > 0; use "
+                "unique rids", RuntimeWarning, stacklevel=2)
         if len(req.prompt) >= self.kv_len:
             raise ValueError(
                 f"request rid={req.rid}: prompt length {len(req.prompt)} "
@@ -249,17 +340,37 @@ class ServeEngine:
                 "strict_admission=False to accept truncated generations")
         self._queue.append(req)
 
-    def run(self, max_steps: int = 512) -> List[Generation]:
-        """Drive decode until queue + slots drain, or ``max_steps`` expires.
+    def run(self, max_steps: int = 512,
+            deadline_s: Optional[float] = None) -> List[Generation]:
+        """Drive decode until queue + slots drain, or ``max_steps`` expires,
+        or the ``deadline_s`` wall-clock watchdog fires.
 
         Returns every generation that made progress: finished ones
-        (``done=True``) and — if the step budget ran out first — the
-        still-live partial ones (``done=False``), with a ``RuntimeWarning``
-        naming the live-slot and still-queued counts, so callers can never
-        silently receive fewer generations than they submitted. Live slots
-        keep their state; calling ``run`` again continues them."""
+        (``done=True``), quarantined ones (``failed=True`` with
+        ``fail_reason``), and — if a budget ran out first — the still-live
+        partial ones (``done=False``), with a ``RuntimeWarning`` naming the
+        live-slot and still-queued counts, so callers can never silently
+        receive fewer generations than they submitted. Live slots keep
+        their state; calling ``run`` again continues them.
+
+        Fault isolation: after each step the emitted logits row of every
+        decode-phase slot is checked for finiteness. A non-finite row
+        quarantines **only that slot** — the generation is returned
+        ``failed`` with its partial tokens, the slot is evicted and its
+        (possibly poisoned) state wiped through the ``batch["reset"]``
+        protocol on the next step — while every co-batched generation
+        keeps decoding undisturbed (per-slot state independence is the
+        ragged path's invariant). ``Request.deadline_steps`` quarantines
+        the same way when a request overstays its step budget. A device
+        step that fails after ``step_retries`` attempts degrades the
+        engine to dense weights (``dense_fallback``) instead of dying."""
         finished: List[Generation] = []
+        t0 = time.monotonic()
+        watchdog_fired = False
         for _ in range(max_steps):
+            if deadline_s is not None and time.monotonic() - t0 > deadline_s:
+                watchdog_fired = True
+                break
             self._fill_slots()
             if all(s is None for s in self._slots):
                 break
@@ -287,25 +398,52 @@ class ServeEngine:
             self._state["pos"] = jnp.asarray(self._slot_pos.copy())
             batch = {"tokens": jnp.asarray(toks),
                      "t_valid": jnp.asarray(t_valid)}
-            # "reset" rides only on steps that admitted a slot: steady-
-            # state decode never pays the cache-wide where. Admission
-            # always prefills, so the step compiles 3 trace variants total
-            # (T=chunk ± reset, T=1), each once per engine lifetime.
+            # "reset" rides only on steps that admitted (or quarantined) a
+            # slot: steady-state decode never pays the cache-wide where.
+            # Admission always prefills, so the step compiles 3 trace
+            # variants in normal operation (T=chunk ± reset, T=1), each
+            # once per engine lifetime; a quarantine on a decode step may
+            # add the rare fourth (T=1 + reset).
             if self._needs_reset.any():
                 batch["reset"] = jnp.asarray(self._needs_reset.copy())
                 self._needs_reset[:] = False
-            logits, self._state = self._step(self.params, self._state, batch)
+            ts = time.monotonic()
+            logits, self._state = self._execute_step(batch)
             logits = np.asarray(logits)
+            self.straggler.record(time.monotonic() - ts)
             for i, g in enumerate(self._slots):
                 if g is None:
                     continue
                 v = int(t_valid[i])
                 self._slot_pos[i] += v
-                if self._slot_pos[i] < len(self._slot_prompt[i]):
-                    continue                      # still prefilling
-                self._emit_token(i, g, logits[i, v - 1], finished)
+                self._slot_steps[i] += 1
+                if self._slot_pos[i] >= len(self._slot_prompt[i]):
+                    row = logits[i, v - 1]
+                    if np.isfinite(row).all():
+                        self._emit_token(i, g, row, finished)
+                    else:
+                        self._quarantine(
+                            i, g, "non-finite logits at token index "
+                            f"{len(g.tokens)}", finished)
+                        continue
+                g = self._slots[i]
+                if g is not None:                 # deadline check
+                    dl = g._req.deadline_steps  # type: ignore
+                    if dl is not None and self._slot_steps[i] >= dl:
+                        self._quarantine(
+                            i, g, f"deadline_steps={dl} exceeded with "
+                            f"{len(g.tokens)} token(s) generated", finished)
         live = [g for g in self._slots if g is not None]
-        if live or self._queue:
+        if watchdog_fired:
+            warnings.warn(
+                f"ServeEngine.run: wall-clock watchdog deadline_s="
+                f"{deadline_s} expired after {time.monotonic() - t0:.2f}s "
+                f"with {len(live)} live slot(s) and {len(self._queue)} "
+                "queued request(s); partial generations are returned with "
+                "done=False and resume on the next run() call",
+                RuntimeWarning, stacklevel=2)
+            finished.extend(live)
+        elif live or self._queue:
             # max_steps expired mid-flight: surface the truncation instead
             # of silently returning fewer generations than were submitted
             warnings.warn(
@@ -317,6 +455,67 @@ class ServeEngine:
             finished.extend(live)
         return finished
 
+    # --------------------------------------------------- fault tolerance
+    def _execute_step(self, batch):
+        """One device step, with the robustness ladder around it: transient
+        failures re-run through the shared ``retry`` helper
+        (``step_retries`` total attempts); a failure that survives retry on
+        an engine still holding packed weights triggers the one-time dense
+        fallback and re-executes on the dequantised params."""
+        call = lambda: self._step(self.params, self._state, batch)
+        try:
+            if self.step_retries > 1:
+                return retry(call, max_attempts=self.step_retries)
+            return call()
+        except (RuntimeError, ValueError, OSError) as e:
+            if not (self.dense_fallback and not self.degraded
+                    and self._has_packed()):
+                raise
+            self.degrade_to_dense(reason=f"device step failed: {e!r}")
+            return call()
+
+    def _has_packed(self) -> bool:
+        return any(isinstance(l, PackedTensor) for l in jax.tree.leaves(
+            self.params, is_leaf=lambda x: isinstance(x, PackedTensor)))
+
+    def degrade_to_dense(self, reason: str = "operator request") -> None:
+        """Degraded-mode kill-switch: dequantise every PackedTensor leaf
+        and keep serving on dense weights (one-time RuntimeWarning; decode
+        state and live generations are untouched, and the next step simply
+        retraces against the dense pytree). The runtime analogue of the
+        ``windowed_cache=False`` layout kill-switch — flip it when the
+        packed matmul path itself is the suspect. Idempotent."""
+        if self.degraded:
+            return
+        self.degraded = True
+        n = sum(1 for l in jax.tree.leaves(
+            self.params, is_leaf=lambda x: isinstance(x, PackedTensor))
+            if isinstance(l, PackedTensor))
+        self.params = jax.tree.map(
+            lambda x: x.dequantise() if isinstance(x, PackedTensor) else x,
+            self.params, is_leaf=lambda x: isinstance(x, PackedTensor))
+        warnings.warn(
+            f"ServeEngine: degraded mode — {n} packed tensor(s) "
+            f"dequantised to dense, packed matmul path bypassed ({reason}); "
+            "the engine keeps serving", RuntimeWarning, stacklevel=2)
+
+    def _quarantine(self, i: int, g: Generation, reason: str,
+                    finished: List[Generation]) -> None:
+        """Evict slot ``i`` alone: return its generation ``failed`` (partial
+        tokens kept, ``done`` stays False), free the slot for admission,
+        and raise the slot's ``batch["reset"]`` bit so the jitted step
+        wipes its (possibly poisoned) KV rows / recurrent state before any
+        reuse — co-batched slots never observe the fault."""
+        g.failed = True
+        g.fail_reason = reason
+        finished.append(g)
+        self._slots[i] = None
+        self._needs_reset[i] = True
+        warnings.warn(
+            f"ServeEngine: quarantined slot {i} (rid={g.rid}): {reason}; "
+            "remaining slots continue undisturbed", RuntimeWarning,
+            stacklevel=3)
+
     # ------------------------------------------------------------- internals
     def _fill_slots(self):
         for i in range(self.B):
@@ -326,6 +525,7 @@ class ServeEngine:
                 self._slots[i]._req = req  # type: ignore
                 self._slot_prompt[i] = list(req.prompt)
                 self._slot_pos[i] = 0
+                self._slot_steps[i] = 0           # deadline clock restarts
                 # the first step after admission carries reset[i]=True: the
                 # jitted step zeroes the slot's KV rows and recurrent state
                 # (the predecessor's) before this prompt's first token

@@ -24,7 +24,16 @@ from typing import Callable, Optional
 
 def retry(fn: Callable, max_attempts: int = 3, backoff_s: float = 0.0,
           on_error: Optional[Callable] = None):
-    last = None
+    """Re-execute ``fn`` on transient failure classes, up to ``max_attempts``
+    total attempts. Shared by the training loop (pure steps make re-execution
+    safe) and the serving engine (``ServeEngine(step_retries=N)`` re-runs a
+    failed device step before degrading). ``max_attempts`` must be ≥ 1 —
+    zero attempts would raise nothing at all. After the last attempt the
+    final exception is re-raised with its original traceback intact."""
+    if max_attempts < 1:
+        raise ValueError(
+            f"retry: max_attempts must be >= 1, got {max_attempts} "
+            "(zero attempts would execute nothing)")
     for attempt in range(max_attempts):
         try:
             return fn()
@@ -34,7 +43,7 @@ def retry(fn: Callable, max_attempts: int = 3, backoff_s: float = 0.0,
                 on_error(attempt, e)
             if backoff_s:
                 time.sleep(backoff_s * (2 ** attempt))
-    raise last
+    raise last.with_traceback(last.__traceback__)
 
 
 @dataclass

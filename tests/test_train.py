@@ -264,6 +264,27 @@ class TestFaultTolerance:
         with pytest.raises(RuntimeError):
             retry(always, max_attempts=2)
 
+    def test_retry_rejects_zero_attempts(self):
+        # max_attempts=0 used to fall through the loop and raise a bare
+        # unbound `last` (TypeError/UnboundLocalError) — it must be a
+        # clear ValueError instead, and the fn must never run
+        calls = {"n": 0}
+
+        def fn():
+            calls["n"] += 1
+
+        for bad in (0, -1):
+            with pytest.raises(ValueError, match="max_attempts"):
+                retry(fn, max_attempts=bad)
+        assert calls["n"] == 0
+
+    def test_retry_preserves_original_error(self):
+        def always():
+            raise OSError("disk went away")
+
+        with pytest.raises(OSError, match="disk went away"):
+            retry(always, max_attempts=3)
+
     def test_heartbeat(self, tmp_path):
         hb = Heartbeat(str(tmp_path))
         hb.beat(3)
