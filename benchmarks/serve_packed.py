@@ -54,16 +54,28 @@ and still produce identical tokens. Drill outcomes are recorded in
 ``BENCH_serve.json`` (``fault_drill`` section) and any failed drill fails
 ``check()``.
 
+The **traffic replay** (``--traffic``) benchmarks the scheduler front end
+(``serve.scheduler`` + ``serve.traffic``) under a seeded Poisson workload
+on the packed engine: p50/p99 time-to-first-token and per-token latency,
+goodput (completed tokens/s excluding failed/truncated), and queue depth
+over time, with and without fault injection. Each workload is replayed
+twice and the bit-determinism of the token streams is recorded and gated;
+the shared-prefix reuse run must spend strictly fewer prefill slot-steps
+than the no-reuse run on identical greedy tokens (``traffic`` section of
+``BENCH_serve.json``).
+
 Besides the usual results/bench row dump, this module writes the
 machine-readable ``BENCH_serve.json`` (tokens/s + resident weight bytes +
 per-family resident ratios + the per-batch sweep ratios + fault-drill
-outcomes) so the serving perf trajectory can be tracked across PRs. Run
-directly with ``--arch`` to restrict coverage, or ``--sweep-only`` /
-``--fault-drill`` for those modes alone (together they form the
-``run_tests.sh --bench-smoke`` target):
+outcomes + traffic-replay latency/goodput) so the serving perf trajectory
+can be tracked across PRs. Run directly with ``--arch`` to restrict
+coverage, or ``--sweep-only`` / ``--fault-drill`` / ``--traffic`` for
+those modes alone (together they form the ``run_tests.sh --bench-smoke``
+target):
 
     PYTHONPATH=src python -m benchmarks.serve_packed --arch rwkv6,whisper
-    PYTHONPATH=src python -m benchmarks.serve_packed --sweep-only --fault-drill
+    PYTHONPATH=src python -m benchmarks.serve_packed --sweep-only \\
+        --fault-drill --traffic
 """
 from __future__ import annotations
 
@@ -377,6 +389,85 @@ def run_fault_drill(fast: bool = True):
     return rows
 
 
+def run_traffic(fast: bool = True, seed: int = 0):
+    """Traffic replay on the packed paper-100m engine: a seeded Poisson
+    workload (``serve.traffic``) through the scheduler front end, with and
+    without fault injection, each replayed **twice** to record the
+    bit-determinism bit, plus the shared-prefix reuse vs no-reuse
+    comparison. Rows (``path="traffic/<name>"``) carry p50/p99 TTFT and
+    per-token latency, goodput (completed tokens/s excluding
+    failed/truncated), queue depth over time, and the prefill-step
+    accounting ``check()`` gates on: goodput > 0, no starvation (every
+    request reaches a terminal state), deterministic replay, and reuse
+    strictly cheaper than recompute on identical greedy tokens."""
+    import dataclasses
+    import warnings
+
+    from repro.serve import traffic as traffic_mod
+
+    variant = "smoke" if fast else "small"
+    cfg = configs.get_config("paper-100m", variant).replace(
+        dtype="float32", param_dtype="float32")
+    fam = mapi.get_family(cfg.family)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    plan = build_plan(params, DRILL_FMT)
+    qparams = plan.quantise(params)
+    eng_kw = dict(batch_slots=3, kv_len=96, prefill_chunk=4)
+
+    def fresh():
+        return ServeEngine.from_quantised(cfg, qparams, plan, **eng_kw)
+
+    spec = traffic_mod.TrafficSpec(seed=seed,
+                                   n_requests=16 if fast else 48,
+                                   rate=0.6)
+    # 6-step NaN window on slot 0: wide enough to straddle any prefill
+    # chunk in flight at step 9, so the fault always lands on a decode
+    # emit and the quarantine path is actually exercised (check() gates
+    # failed >= 1 on faulted replays)
+    spec_faulted = dataclasses.replace(spec, fault_nan=((0, 9, 6),))
+    rows = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        for name, sp in (("replay", spec), ("replay_faulted", spec_faulted)):
+            wl = traffic_mod.generate(sp)
+            r1 = traffic_mod.replay(fresh(), wl)
+            r2 = traffic_mod.replay(fresh(), wl)
+            rows.append(dict(
+                path=f"traffic/{name}", seed=sp.seed, fmt=DRILL_FMT,
+                variant=variant, fault_nan=[list(f) for f in sp.fault_nan],
+                deterministic=(r1.deterministic_signature()
+                               == r2.deterministic_signature()),
+                **r1.metrics))
+            print(f"[traffic] {name}: goodput "
+                  f"{r1.metrics['goodput_tok_s']} tok/s, TTFT p50/p99 "
+                  f"{r1.metrics['ttft_p50_s']}/{r1.metrics['ttft_p99_s']}s, "
+                  f"completed {r1.metrics['completed']}"
+                  f"/{r1.metrics['n_requests']} "
+                  f"(failed {r1.metrics['failed']}), "
+                  f"deterministic={rows[-1]['deterministic']}")
+            if name == "replay":
+                r_no = traffic_mod.replay(fresh(), wl, use_prefix=False)
+                rows.append(dict(
+                    path="traffic/prefix_reuse", seed=sp.seed,
+                    reuse_prefill_slot_steps=r1.metrics[
+                        "total_prefill_slot_steps"],
+                    no_reuse_prefill_slot_steps=r_no.metrics[
+                        "total_prefill_slot_steps"],
+                    prefill_steps_saved=(
+                        r_no.metrics["total_prefill_slot_steps"]
+                        - r1.metrics["total_prefill_slot_steps"]),
+                    forks=r1.metrics["forks"],
+                    forked_tokens=r1.metrics["forked_tokens"],
+                    tokens_identical=r1.tokens == r_no.tokens))
+                print(f"[traffic] prefix_reuse: "
+                      f"{rows[-1]['reuse_prefill_slot_steps']} vs "
+                      f"{rows[-1]['no_reuse_prefill_slot_steps']} prefill "
+                      f"slot-steps (saved "
+                      f"{rows[-1]['prefill_steps_saved']}), identical="
+                      f"{rows[-1]['tokens_identical']}")
+    return rows
+
+
 def run(fast: bool = True, archs=None, sweep: bool = True):
     rng = np.random.default_rng(0)
     table = _family_table(fast)
@@ -410,7 +501,7 @@ def _write_bench_serve(rows):
     the existing record so other entries survive."""
     rec = {"bench": "serve_packed", "paths": {},
            "resident_ratio_vs_f32": {}, "batch_sweep": {},
-           "fault_drill": {}}
+           "fault_drill": {}, "traffic": {}}
     if os.path.exists(BENCH_SERVE_OUT):
         try:
             with open(BENCH_SERVE_OUT) as f:
@@ -421,6 +512,7 @@ def _write_bench_serve(rows):
                     old.get("resident_ratio_vs_f32", {}))
                 rec["batch_sweep"].update(old.get("batch_sweep", {}))
                 rec["fault_drill"].update(old.get("fault_drill", {}))
+                rec["traffic"].update(old.get("traffic", {}))
         except (json.JSONDecodeError, OSError):
             pass
     for r in rows:
@@ -430,6 +522,9 @@ def _write_bench_serve(rows):
                 k: v for k, v in r.items() if k not in ("path", "batch")}
         elif r["path"].startswith("fault_drill/"):
             rec["fault_drill"][r["path"].split("/", 1)[1]] = {
+                k: v for k, v in r.items() if k != "path"}
+        elif r["path"].startswith("traffic/"):
+            rec["traffic"][r["path"].split("/", 1)[1]] = {
                 k: v for k, v in r.items() if k != "path"}
         elif "tokens_per_s" in r:
             rec["paths"][r["path"]] = {
@@ -485,9 +580,40 @@ def check(rows):
         if r["path"].startswith("fault_drill/") and not r["ok"]:
             fails.append(f"{r['path']}: drill failed "
                          f"({r.get('error', r)})")
+    # traffic replay: deterministic, goodput > 0, no starvation (every
+    # request terminal), and prefix reuse strictly cheaper than recompute
+    # on identical greedy tokens
+    for r in rows:
+        if not r["path"].startswith("traffic/"):
+            continue
+        if r["path"] == "traffic/prefix_reuse":
+            if not r["tokens_identical"]:
+                fails.append("traffic/prefix_reuse: forked-prefix tokens "
+                             "differ from recompute")
+            if (r["reuse_prefill_slot_steps"]
+                    >= r["no_reuse_prefill_slot_steps"]):
+                fails.append(
+                    "traffic/prefix_reuse: no prefill saving "
+                    f"({r['reuse_prefill_slot_steps']} vs "
+                    f"{r['no_reuse_prefill_slot_steps']} slot-steps)")
+            continue
+        if not r["deterministic"]:
+            fails.append(f"{r['path']}: replay not bit-deterministic "
+                         "across two runs")
+        if r["goodput_tok_s"] <= 0:
+            fails.append(f"{r['path']}: goodput "
+                         f"{r['goodput_tok_s']} tok/s (<= 0)")
+        if r["fault_nan"] and r["failed"] < 1:
+            fails.append(f"{r['path']}: armed fault never quarantined a "
+                         "request (failed=0) — the injection missed")
+        terminal = r["completed"] + r["failed"] + r["truncated"]
+        if terminal != r["n_requests"]:
+            fails.append(f"{r['path']}: starvation — only {terminal} of "
+                         f"{r['n_requests']} requests reached a terminal "
+                         "state")
     by = {r["path"]: r for r in rows}
     tags = ({r["path"].split("/")[0] for r in rows}
-            - {"sweep", "fault_drill"})
+            - {"sweep", "fault_drill", "traffic"})
     for tag in sorted(tags):
         if not by[f"{tag}/tokens_identical"]["value"]:
             fails.append(f"{tag}: packed and dense engines disagree on "
@@ -539,13 +665,24 @@ if __name__ == "__main__":
                          "check()); combines with --sweep-only")
     ap.add_argument("--no-sweep", action="store_true",
                     help="family rows only, skip the decode batch sweep")
+    ap.add_argument("--traffic", action="store_true",
+                    help="run the seeded traffic replay (scheduler front "
+                         "end: Poisson arrivals, priorities, shared-prefix "
+                         "reuse, faulted variant; p50/p99 TTFT + goodput "
+                         "recorded in BENCH_serve.json 'traffic' and gated "
+                         "by check()); combines with --sweep-only and "
+                         "--fault-drill")
+    ap.add_argument("--traffic-seed", type=int, default=0,
+                    help="workload seed for --traffic (default 0)")
     args = ap.parse_args()
-    if args.sweep_only or args.fault_drill:
+    if args.sweep_only or args.fault_drill or args.traffic:
         rows = []
         if args.sweep_only:
             rows += run_batch_sweep(fast=not args.full)
         if args.fault_drill:
             rows += run_fault_drill(fast=not args.full)
+        if args.traffic:
+            rows += run_traffic(fast=not args.full, seed=args.traffic_seed)
         write_rows("serve_packed_sweep", rows)
         _write_bench_serve(rows)
     else:

@@ -24,13 +24,23 @@
 #                                   quarantine + survivor parity, deadlines,
 #                                   watchdog, step retry, dense fallback,
 #                                   admission faults)
+#   scripts/run_tests.sh --traffic  scheduler front-end tests only
+#                                   (shared-prefix fork parity per family,
+#                                   pool eviction, priority/aging admission,
+#                                   submit/stream lifecycle, expiry
+#                                   accounting, deterministic traffic
+#                                   replay)
 #   scripts/run_tests.sh --bench-smoke
 #                                   smallest decode batch sweep (full-size
 #                                   paper-100m, reduced batch points/reps)
-#                                   plus the fault drill: enforces packed ≥
-#                                   f32 tokens/s at every swept batch size
-#                                   with identical greedy tokens, and that
-#                                   every injected-fault recovery worked;
+#                                   plus the fault drill and the seeded
+#                                   traffic replay: enforces packed ≥ f32
+#                                   tokens/s at every swept batch size with
+#                                   identical greedy tokens, every
+#                                   injected-fault recovery, goodput > 0
+#                                   with no starvation, bit-deterministic
+#                                   replay across two runs, and prefix
+#                                   reuse strictly cheaper than recompute;
 #                                   exits non-zero on violation
 #   scripts/run_tests.sh [pytest args...]   extra args forwarded to pytest
 #
@@ -50,7 +60,8 @@ fi
 if [ "${1:-}" = "--serve" ]; then
     shift
     exec python -m pytest -q tests/test_serve.py tests/test_serve_ragged.py \
-        tests/test_serve_windowed.py tests/test_serve_faults.py "$@"
+        tests/test_serve_windowed.py tests/test_serve_faults.py \
+        tests/test_serve_traffic.py "$@"
 fi
 if [ "${1:-}" = "--windowed" ]; then
     shift
@@ -60,8 +71,13 @@ if [ "${1:-}" = "--faults" ]; then
     shift
     exec python -m pytest -q tests/test_serve_faults.py "$@"
 fi
+if [ "${1:-}" = "--traffic" ]; then
+    shift
+    exec python -m pytest -q tests/test_serve_traffic.py "$@"
+fi
 if [ "${1:-}" = "--bench-smoke" ]; then
     shift
-    exec python -m benchmarks.serve_packed --sweep-only --fault-drill "$@"
+    exec python -m benchmarks.serve_packed --sweep-only --fault-drill \
+        --traffic "$@"
 fi
 exec python -m pytest -q -m "not slow" "$@"

@@ -94,6 +94,64 @@ Components
     and 0.23× cache — greedy tokens identical to the dense path in every
     family.
 
+The scheduling front end
+------------------------
+``scheduler.Scheduler`` is the production serving loop over one engine —
+the layer that turns drain-the-queue batch decoding into a front end real
+traffic can hit:
+
+* **submit/stream lifecycle** — ``Scheduler.submit(prompt, priority=...,
+  prefix=..., at=...)`` validates eagerly (the engine's own KV-budget
+  check, so malformed requests fail at the caller) and returns a
+  ``StreamHandle`` immediately; ``handle.stream()`` yields tokens as they
+  are decoded by cooperatively driving ``ServeEngine.step_once`` (the
+  single-threaded analogue of an async server loop), ``handle.result()``
+  blocks to completion, and ``Scheduler.run()`` drains everything.
+  Admission is **continuous**: the engine calls the scheduler back before
+  every slot-fill pass — including the mid-wave refill at the end of each
+  step — so a slot freed by a finished or quarantined generation is
+  reseated inside the same wave, riding the existing ``batch["reset"]``
+  protocol with no new step-fn surface.
+* **priority + aging** — requests are released into free slots by
+  effective priority ``priority + aging * steps_waited`` (FIFO among
+  ties), so higher-priority requests admit sooner but a low-priority
+  request can never starve: after ``Δpriority / aging`` steps it outranks
+  every fresh arrival. All scheduling runs on a **virtual step clock**
+  (``submit(at=...)`` arrival times in engine steps, idle gaps
+  fast-forwarded), so a replayed workload admits identically every run;
+  wall-clock only appears in the latency stamps ``Generation`` carries
+  (``t_submit``/``t_admit``/``t_first_token``/``t_done`` +
+  ``queue_steps``).
+* **shared-prefix reuse** — ``register_prefix(key, tokens)`` declares a
+  common prompt prefix (system prompt, few-shot header); requests
+  submitted with ``prefix=key`` prefill it **once** into the
+  ``PrefixPool`` (through the engine's own jitted step, donor row 0 of a
+  zeroed state) and admission *forks* the pooled KV rows into the seated
+  slot: pure state surgery over every ``CacheSpec.state_keys`` entry —
+  ring and global groups alike — plus the position jump, with the
+  admission reset bit cleared because the full-row copy subsumes the
+  wipe. Forked slots decode **bit-identically** to full recomputation
+  (chunked prefill is exact); families whose per-slot state is not just
+  KV + position (rwkv6/zamba2/whisper) recompute with a one-time warning
+  instead. Pool entries are LRU-evicted; forks hold copies, so eviction
+  never disturbs a live generation.
+* **failure semantics** — the front end inherits the robustness layer
+  below unchanged: a quarantined slot surfaces as its handle's
+  ``failed`` generation and the freed slot is refilled in the same wave;
+  the degraded-mode fallback and watchdog behave exactly as under direct
+  ``engine.run``.
+
+``traffic`` generates deterministic replayable workloads (seeded Poisson
+arrivals on the virtual clock, mixed prompt/output lengths, prefix-group
+and priority mixes, optional ``serve.faults`` NaN windows) and
+``traffic.replay`` measures p50/p99 TTFT and per-token latency, goodput
+(completed tokens/s excluding failed/truncated) and queue depth — two
+replays of one spec are bit-deterministic (token streams + step-clock
+accounting), which ``benchmarks/serve_packed.py --traffic`` records in
+``BENCH_serve.json`` (``traffic`` section) and gates, together with
+prefix reuse being strictly cheaper than recompute on identical greedy
+tokens.
+
 The robustness layer
 --------------------
 Serving on aggressively quantised weights concentrates failure into two
@@ -143,6 +201,11 @@ afterthought. Every recovery path below has a deterministic injector in
     drop/duplicate faults — each returning counter state so tests assert
     the fault actually fired.
 
+``scheduler`` / ``traffic``
+    The front end described above: ``Scheduler``/``StreamHandle``/
+    ``PrefixPool``, and the seeded workload generator + replay driver
+    behind the traffic benchmarks.
+
 ``context_parallel``
     Flash-decode attention over a sequence-sharded KV cache (exact
     log-sum-exp combine), for caches too big for one device.
@@ -155,10 +218,14 @@ The rest (the MoE router, formats with sparse outliers or tensor/channel
 scaling, tensors whose output dim does not tile by the block — e.g.
 zamba2's 548-wide in_proj in smoke) are dequantised at load.
 """
-from . import cache, context_parallel, engine, faults  # noqa: F401
+from . import (cache, context_parallel, engine, faults,  # noqa: F401
+               scheduler, traffic)
 from .cache import CacheGroup, CacheSpec, build_cache_spec
 from .engine import Request, ServeEngine, greedy_generate
+from .scheduler import PrefixPool, Scheduler, StreamHandle
+from .traffic import TrafficSpec, Workload
 
-__all__ = ["cache", "context_parallel", "engine", "faults", "CacheGroup",
-           "CacheSpec", "build_cache_spec", "Request", "ServeEngine",
-           "greedy_generate"]
+__all__ = ["cache", "context_parallel", "engine", "faults", "scheduler",
+           "traffic", "CacheGroup", "CacheSpec", "build_cache_spec",
+           "Request", "ServeEngine", "greedy_generate", "PrefixPool",
+           "Scheduler", "StreamHandle", "TrafficSpec", "Workload"]

@@ -119,6 +119,13 @@ class CacheSpec:
     def n_layers(self) -> int:
         return sum(len(g.layers) for g in self.groups)
 
+    @property
+    def state_keys(self) -> Tuple[str, ...]:
+        """Every decode-state key this geometry owns (``k{g}``/``v{g}`` per
+        group) — the rows a shared-prefix fork must copy (ring and global
+        groups alike; see serve.scheduler.PrefixPool)."""
+        return tuple(k for g in self.groups for k in (g.k_key, g.v_key))
+
     def cache_bytes(self) -> dict:
         """Byte accounting: per-group breakdown, grouped total (``kv``),
         and the uniform full-length baseline (``uniform_kv``) the rolling

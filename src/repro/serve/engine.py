@@ -41,6 +41,14 @@ Fault tolerance (the serving robustness layer; drills in ``serve.faults``):
 * **load-time integrity** — ``from_quantised(validate=True)`` runs
   ``QuantisationPlan.verify_packed`` over the packed checkpoint and fails
   fast naming the corrupted tensor path (``validate=False`` opts out).
+
+The engine is the slot/step substrate; the production front end lives one
+layer up in ``serve.scheduler``, which wires into ``admission_hook`` /
+``on_admit`` (called on every admission pass — including the mid-wave
+refill at the end of each ``step_once``) to release arrivals by
+priority+aging and to fork pooled shared-prefix KV into freshly seated
+slots. ``step_once`` is public for that front end's cooperative
+streaming; ``run`` remains the drain-everything loop.
 """
 from __future__ import annotations
 
@@ -103,6 +111,17 @@ class Generation:
     # partial tokens are kept, done stays False, and fail_reason says why
     failed: bool = False
     fail_reason: str = ""
+    # latency accounting (``time.monotonic()`` stamps; 0.0 = not reached):
+    # the result object carries its own lifecycle times so latency metrics
+    # (TTFT, per-token) are read off the generation, not reconstructed by
+    # the caller. queue_steps is how many engine steps the request waited
+    # between submit and admission (the step-clock analogue of
+    # t_admit - t_submit, immune to wall-clock noise).
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+    queue_steps: int = 0
 
 
 class ServeEngine:
@@ -165,6 +184,20 @@ class ServeEngine:
         self.step_retries = step_retries
         self.dense_fallback = dense_fallback
         self.degraded = False     # dense fallback engaged (degrade_to_dense)
+        # engine step clock: device steps executed over the engine lifetime
+        # (prefill chunks + decode steps), plus the prefill-phase breakdown
+        # the shared-prefix benchmarks compare (prefill_slot_steps counts
+        # slot×step prefill work — the unit prefix reuse saves)
+        self.steps_total = 0
+        self.prefill_steps = 0
+        self.prefill_slot_steps = 0
+        # front-end hooks (see serve.scheduler). admission_hook(engine) runs
+        # before every slot-fill pass — a scheduler releases arrivals into
+        # the queue (priority/aging order) there; on_admit(engine, slot,
+        # request, generation) runs after a slot is seated — a scheduler
+        # forks pooled shared-prefix KV into the slot there.
+        self.admission_hook = None
+        self.on_admit = None
         self.straggler = StragglerMonitor()
         self._state = self._zero_state()
         self._slots: List[Optional[Generation]] = [None] * batch_slots
@@ -306,6 +339,19 @@ class ServeEngine:
         ``rid`` colliding with a queued or live request warns: sampling
         seeds from ``(rid, token index)``, so colliding rids silently draw
         identical streams."""
+        self.validate_request(req)
+        # latency stamps: a front end (serve.scheduler) may pre-stamp the
+        # submit time/step (e.g. a replayed arrival); default to now
+        if not hasattr(req, "_t_submit"):
+            req._t_submit = time.monotonic()
+        if not hasattr(req, "_submit_step"):
+            req._submit_step = self.steps_total
+        self._queue.append(req)
+
+    def validate_request(self, req: Request) -> None:
+        """The admission checks behind :meth:`submit`, callable up front by
+        schedulers so a malformed or over-budget request fails at the
+        caller instead of mid-replay (same checks, one source)."""
         if not req.prompt:
             raise ValueError(
                 f"request rid={req.rid}: empty prompt — at least one token "
@@ -338,7 +384,6 @@ class ServeEngine:
                 f"budget (kv_len={self.kv_len}) — the generation would be "
                 "truncated; shrink the request or build the engine with "
                 "strict_admission=False to accept truncated generations")
-        self._queue.append(req)
 
     def run(self, max_steps: int = 512,
             deadline_s: Optional[float] = None) -> List[Generation]:
@@ -371,68 +416,22 @@ class ServeEngine:
             if deadline_s is not None and time.monotonic() - t0 > deadline_s:
                 watchdog_fired = True
                 break
-            self._fill_slots()
-            if all(s is None for s in self._slots):
+            if not self.step_once(finished):
                 break
-            prefilling = any(
-                g is not None and self._slot_pos[i] < len(self._slot_prompt[i])
-                for i, g in enumerate(self._slots))
-            T = self.prefill_chunk if prefilling else 1
-            toks = np.zeros((self.B, T), np.int32)
-            t_valid = np.zeros(self.B, np.int32)
-            for i, g in enumerate(self._slots):
-                if g is None:
-                    continue
-                consumed = int(self._slot_pos[i])
-                prompt = self._slot_prompt[i]
-                if consumed < len(prompt):        # prefill: next chunk
-                    v = min(T, len(prompt) - consumed)
-                    toks[i, :v] = prompt[consumed:consumed + v]
-                else:                             # decode: last sampled token
-                    v = 1
-                    toks[i, 0] = g.tokens[-1]
-                t_valid[i] = v
-            # .copy(): jnp.asarray may alias a numpy buffer zero-copy on
-            # CPU, and _slot_pos/_needs_reset are mutated in place below —
-            # the device computation must see this iteration's snapshot
-            self._state["pos"] = jnp.asarray(self._slot_pos.copy())
-            batch = {"tokens": jnp.asarray(toks),
-                     "t_valid": jnp.asarray(t_valid)}
-            # "reset" rides only on steps that admitted (or quarantined) a
-            # slot: steady-state decode never pays the cache-wide where.
-            # Admission always prefills, so the step compiles 3 trace
-            # variants in normal operation (T=chunk ± reset, T=1), each
-            # once per engine lifetime; a quarantine on a decode step may
-            # add the rare fourth (T=1 + reset).
-            if self._needs_reset.any():
-                batch["reset"] = jnp.asarray(self._needs_reset.copy())
-                self._needs_reset[:] = False
-            ts = time.monotonic()
-            logits, self._state = self._execute_step(batch)
-            logits = np.asarray(logits)
-            self.straggler.record(time.monotonic() - ts)
-            for i, g in enumerate(self._slots):
-                if g is None:
-                    continue
-                v = int(t_valid[i])
-                self._slot_pos[i] += v
-                self._slot_steps[i] += 1
-                if self._slot_pos[i] >= len(self._slot_prompt[i]):
-                    row = logits[i, v - 1]
-                    if np.isfinite(row).all():
-                        self._emit_token(i, g, row, finished)
-                    else:
-                        self._quarantine(
-                            i, g, "non-finite logits at token index "
-                            f"{len(g.tokens)}", finished)
-                        continue
-                g = self._slots[i]
-                if g is not None:                 # deadline check
-                    dl = g._req.deadline_steps  # type: ignore
-                    if dl is not None and self._slot_steps[i] >= dl:
-                        self._quarantine(
-                            i, g, f"deadline_steps={dl} exceeded with "
-                            f"{len(g.tokens)} token(s) generated", finished)
+        # Expiry accounting under mid-wave admission: a slot seated by the
+        # refill at the end of the final step has never executed a device
+        # step — it is indistinguishable from a queued request, so un-admit
+        # it (requeue the Request at the front, discard the Generation; the
+        # slot's reset bit stays raised) and count it as queued below.
+        # Returning it as a zero-progress "live" partial would both
+        # misreport progress and hand the caller a Generation that a
+        # resumed run() re-admits as a fresh one.
+        requeue: List[Request] = []
+        for i, g in enumerate(self._slots):
+            if g is not None and self._slot_steps[i] == 0:
+                requeue.append(g._req)  # type: ignore
+                self._slots[i] = None
+        self._queue[:0] = requeue
         live = [g for g in self._slots if g is not None]
         if watchdog_fired:
             warnings.warn(
@@ -454,6 +453,86 @@ class ServeEngine:
                 RuntimeWarning, stacklevel=2)
             finished.extend(live)
         return finished
+
+    def step_once(self, finished: List[Generation]) -> bool:
+        """One continuous-batching iteration: admit (front-end hook + slot
+        fill), execute one device step over the live slots, emit/quarantine
+        per slot, then **refill any slot freed mid-wave** — a finished or
+        quarantined slot is reclaimed inside the same iteration, so
+        admission never waits for a wave to drain. Generations completing
+        during the step are appended to ``finished``. Returns False (no
+        step executed) when there is nothing to do — no live slot and the
+        admission pass produced none."""
+        self._admit()
+        if all(s is None for s in self._slots):
+            return False
+        prefill_rows = [
+            i for i, g in enumerate(self._slots)
+            if g is not None and self._slot_pos[i] < len(self._slot_prompt[i])]
+        T = self.prefill_chunk if prefill_rows else 1
+        toks = np.zeros((self.B, T), np.int32)
+        t_valid = np.zeros(self.B, np.int32)
+        for i, g in enumerate(self._slots):
+            if g is None:
+                continue
+            consumed = int(self._slot_pos[i])
+            prompt = self._slot_prompt[i]
+            if consumed < len(prompt):        # prefill: next chunk
+                v = min(T, len(prompt) - consumed)
+                toks[i, :v] = prompt[consumed:consumed + v]
+            else:                             # decode: last sampled token
+                v = 1
+                toks[i, 0] = g.tokens[-1]
+            t_valid[i] = v
+        # .copy(): jnp.asarray may alias a numpy buffer zero-copy on
+        # CPU, and _slot_pos/_needs_reset are mutated in place below —
+        # the device computation must see this iteration's snapshot
+        self._state["pos"] = jnp.asarray(self._slot_pos.copy())
+        batch = {"tokens": jnp.asarray(toks),
+                 "t_valid": jnp.asarray(t_valid)}
+        # "reset" rides only on steps that admitted (or quarantined) a
+        # slot: steady-state decode never pays the cache-wide where.
+        # Admission always prefills, so the step compiles 3 trace
+        # variants in normal operation (T=chunk ± reset, T=1), each
+        # once per engine lifetime; a quarantine on a decode step may
+        # add the rare fourth (T=1 + reset).
+        if self._needs_reset.any():
+            batch["reset"] = jnp.asarray(self._needs_reset.copy())
+            self._needs_reset[:] = False
+        ts = time.monotonic()
+        logits, self._state = self._execute_step(batch)
+        logits = np.asarray(logits)
+        self.straggler.record(time.monotonic() - ts)
+        self.steps_total += 1
+        if prefill_rows:
+            self.prefill_steps += 1
+            self.prefill_slot_steps += len(prefill_rows)
+        for i, g in enumerate(self._slots):
+            if g is None:
+                continue
+            v = int(t_valid[i])
+            self._slot_pos[i] += v
+            self._slot_steps[i] += 1
+            if self._slot_pos[i] >= len(self._slot_prompt[i]):
+                row = logits[i, v - 1]
+                if np.isfinite(row).all():
+                    self._emit_token(i, g, row, finished)
+                else:
+                    self._quarantine(
+                        i, g, "non-finite logits at token index "
+                        f"{len(g.tokens)}", finished)
+                    continue
+            g = self._slots[i]
+            if g is not None:                 # deadline check
+                dl = g._req.deadline_steps  # type: ignore
+                if dl is not None and self._slot_steps[i] >= dl:
+                    self._quarantine(
+                        i, g, f"deadline_steps={dl} exceeded with "
+                        f"{len(g.tokens)} token(s) generated", finished)
+        # mid-wave refill: slots freed by _emit_token/_quarantine above are
+        # reclaimed now, inside the wave, not at the next run() pass
+        self._admit()
+        return True
 
     # --------------------------------------------------- fault tolerance
     def _execute_step(self, batch):
@@ -508,6 +587,7 @@ class ServeEngine:
         reuse — co-batched slots never observe the fault."""
         g.failed = True
         g.fail_reason = reason
+        g.t_done = time.monotonic()
         finished.append(g)
         self._slots[i] = None
         self._needs_reset[i] = True
@@ -517,12 +597,25 @@ class ServeEngine:
             stacklevel=3)
 
     # ------------------------------------------------------------- internals
+    def _admit(self):
+        """One admission pass: give the front-end hook a chance to release
+        arrivals into the queue (priority order, virtual-clock release —
+        see serve.scheduler), then seat queued requests into free slots."""
+        if self.admission_hook is not None:
+            self.admission_hook(self)
+        self._fill_slots()
+
     def _fill_slots(self):
         for i in range(self.B):
             if self._slots[i] is None and self._queue:
                 req = self._queue.pop(0)
-                self._slots[i] = Generation(rid=req.rid)
-                self._slots[i]._req = req  # type: ignore
+                g = Generation(rid=req.rid)
+                g.t_submit = getattr(req, "_t_submit", 0.0)
+                g.t_admit = time.monotonic()
+                g.queue_steps = self.steps_total - getattr(
+                    req, "_submit_step", self.steps_total)
+                self._slots[i] = g
+                g._req = req  # type: ignore
                 self._slot_prompt[i] = list(req.prompt)
                 self._slot_pos[i] = 0
                 self._slot_steps[i] = 0           # deadline clock restarts
@@ -532,6 +625,11 @@ class ServeEngine:
                 self._needs_reset[i] = True
                 if self._cross_prefill is not None:
                     self._admit_cross(i, req)
+                # front-end hook: a scheduler forks pooled shared-prefix KV
+                # into the seated slot here (pure state surgery — may move
+                # _slot_pos past the pooled prefix and clear the reset bit)
+                if self.on_admit is not None:
+                    self.on_admit(self, i, req, g)
 
     def _admit_cross(self, i: int, req: Request):
         """Per-slot cross-attention prefill: encode this request's frames
@@ -567,12 +665,15 @@ class ServeEngine:
             tok = int(rng.choice(len(p), p=p))
         else:
             tok = int(np.argmax(logits_row))
+        if not g.tokens:
+            g.t_first_token = time.monotonic()
         g.tokens.append(tok)
         hit_budget = len(g.tokens) >= req.max_new_tokens
         hit_kv = self._slot_pos[i] >= self.kv_len - 1
         if hit_budget or hit_kv:
             g.done = True
             g.truncated = bool(hit_kv and not hit_budget)
+            g.t_done = time.monotonic()
             finished.append(g)
             self._slots[i] = None
     # ------------------------------------------------------------------------
