@@ -1,9 +1,22 @@
 #!/usr/bin/env bash
 # Tier-1 test runner.
 #
-#   scripts/run_tests.sh            fast suite (deselects the >10s `slow`
-#                                   train-loop tests; ~half the wall clock)
-#   scripts/run_tests.sh --all      full tier-1 suite
+#   scripts/run_tests.sh            fast suite: the static-analysis gate
+#                                   (see --lint) followed by pytest with
+#                                   the >10s `slow` train-loop tests
+#                                   deselected
+#   scripts/run_tests.sh --all      full tier-1 suite (pytest only)
+#   scripts/run_tests.sh --lint     static-analysis gate only: the
+#                                   serving-invariant linter over src/
+#                                   plus the registry contract verifier
+#                                   (`python -m repro.analysis`); non-zero
+#                                   on any finding not covered by the
+#                                   checked-in baseline
+#                                   (src/repro/analysis/baseline.json,
+#                                   empty on the merged tree) or any
+#                                   contract violation; extra args forward
+#                                   to the analysis CLI (--contracts-only,
+#                                   --family TAG, --rules, paths...)
 #   scripts/run_tests.sh --kernels  interpret-mode Pallas kernel smoke:
 #                                   runs the kernel bodies (block_quant +
 #                                   dequant_matmul incl. nibble-packed and
@@ -42,7 +55,10 @@
 #                                   replay across two runs, and prefix
 #                                   reuse strictly cheaper than recompute;
 #                                   exits non-zero on violation
-#   scripts/run_tests.sh [pytest args...]   extra args forwarded to pytest
+#   scripts/run_tests.sh [pytest args...]   any first argument that is not
+#                                   a target flag above (e.g. -k, -x, a
+#                                   test path) forwards untouched to the
+#                                   fast-suite pytest invocation
 #
 # Works offline: tests/conftest.py shims `hypothesis` when it is missing.
 set -euo pipefail
@@ -80,4 +96,11 @@ if [ "${1:-}" = "--bench-smoke" ]; then
     exec python -m benchmarks.serve_packed --sweep-only --fault-drill \
         --traffic "$@"
 fi
+if [ "${1:-}" = "--lint" ]; then
+    shift
+    exec python -m repro.analysis "$@"
+fi
+# default fast target: static-analysis gate first (set -e aborts on red),
+# then the fast pytest suite
+python -m repro.analysis -q
 exec python -m pytest -q -m "not slow" "$@"

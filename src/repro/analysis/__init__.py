@@ -1,0 +1,43 @@
+"""repro.analysis — static serving-invariant linter + registry contract
+verifier.
+
+The serving stack's correctness invariants were, until this package,
+enforced only dynamically: packed coverage by routing every weight
+application through ``layers.linear`` (PR 3), per-slot state hygiene by
+the ragged reset protocol (PR 4), checkpoint integrity by
+``verify_packed`` at load (PR 7). The bug classes that cost whole PRs —
+``jnp.asarray`` zero-copy aliasing of host-mutated buffers into the
+jitted step, raw weight einsums silently densifying packed codes — are
+statically detectable, so this package detects them statically: every
+future subsystem (quantised KV cache, fractional-bit serving, packed EP)
+inherits the invariants for free instead of re-discovering them as
+silent quality loss.
+
+Two halves:
+
+* **Lint** (``repro.analysis.lint`` + ``rules/``): AST rules
+  ``host-aliasing``, ``raw-weight-einsum``, ``nondeterminism``,
+  ``unguarded-state-write``; per-line ``# lint: allow(rule-id) <reason>``
+  pragmas and a checked-in baseline (empty on the merged tree).
+* **Contracts** (``repro.analysis.contracts``): for every registered
+  ``ModelFamily`` × assigned smoke config, verify ``pack_layouts`` paths/
+  subscripts against the param tree, ``decode_state_specs``/``cache_spec``
+  /``state_keys`` agreement, and that ``supports_ragged`` matches what
+  ``jax.eval_shape`` on ``decode_step`` actually accepts — abstract eval
+  only, no FLOPs.
+
+CLI: ``python -m repro.analysis`` (see ``__main__.py``), wired into
+tier-1 as ``scripts/run_tests.sh --lint`` and run by the default fast
+target. See ``README.md`` in this directory for the invariant ↔ bug/PR
+map and pragma/baseline usage.
+"""
+from .lint import (Finding, lint_file, lint_paths, load_baseline,
+                   partition, save_baseline, DEFAULT_BASELINE)
+from .rules import RULES, RULE_IDS
+from .contracts import ContractReport, default_matrix, verify_all, \
+    verify_family
+
+__all__ = ["Finding", "lint_file", "lint_paths", "load_baseline",
+           "partition", "save_baseline", "DEFAULT_BASELINE", "RULES",
+           "RULE_IDS", "ContractReport", "default_matrix", "verify_all",
+           "verify_family"]

@@ -1,0 +1,163 @@
+"""Lint rules: repo-specific serving invariants, distilled from shipped
+bug classes (see ``repro/analysis/README.md`` for the bug → rule map).
+
+Each rule is an object with:
+
+* ``rule_id``   — kebab-case id used in findings, pragmas and baselines
+* ``hint``      — one-line fix hint appended to every finding
+* ``check(tree, src, path)`` — AST pass returning ``[(line, message)]``
+
+Rules are registered in :data:`RULES` (one module per rule under this
+package). A rule decides its own path scope internally (e.g. the
+wall-clock sub-check of ``nondeterminism`` only applies to step/serve
+paths under ``src/repro``); files *outside* ``src/repro`` — lint
+fixtures, explicitly-passed files — always get the full rule set, so the
+test fixtures exercise every pattern regardless of where they sit.
+
+This module holds the shared AST helpers the rules build on.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Best-effort dotted path of a Name/Attribute chain ('' otherwise)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def unwrap_views(node: ast.AST) -> ast.AST:
+    """Strip value-preserving wrappers (``.astype(...)``, ``.reshape(...)``,
+    ``.transpose(...)``, ``.T``/``.mT``) so the underlying operand is
+    classified, not the view chain."""
+    while True:
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("astype", "reshape", "transpose",
+                                       "swapaxes")):
+            node = node.func.value
+        elif isinstance(node, ast.Attribute) and node.attr in ("T", "mT"):
+            node = node.value
+        else:
+            return node
+
+
+def functions(tree: ast.AST) -> Iterable[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def direct_body(fn: ast.FunctionDef) -> List[ast.AST]:
+    """Walk a function's subtree, excluding nested function bodies (each
+    nested def is its own binding scope)."""
+    out: List[ast.AST] = []
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        out.append(node)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def module_body(tree: ast.Module) -> List[ast.AST]:
+    """Module-level statements, excluding function bodies."""
+    out: List[ast.AST] = []
+    stack = [n for n in ast.iter_child_nodes(tree)]
+    while stack:
+        node = stack.pop()
+        out.append(node)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def in_repo_src(path: str) -> bool:
+    return "src/repro" in path.replace("\\", "/")
+
+
+def inplace_mutations(nodes: Iterable[ast.AST]):
+    """Yield ``(kind, name, line)`` for in-place writes:
+    ``x[...] = / x[...] op= / x.fill(...)`` where x is a Name ('local') or
+    an Attribute ('attr', keyed by the attribute name)."""
+    for node in nodes:
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr == "fill"):
+            base = node.func.value
+            if isinstance(base, (ast.Name, ast.Attribute)):
+                if isinstance(base, ast.Name):
+                    yield "local", base.id, node.lineno
+                else:
+                    yield "attr", base.attr, node.lineno
+            continue
+        for t in targets:
+            if not isinstance(t, ast.Subscript):
+                continue
+            base = t.value
+            if isinstance(base, ast.Name):
+                yield "local", base.id, node.lineno
+            elif isinstance(base, ast.Attribute):
+                yield "attr", base.attr, node.lineno
+
+
+WEIGHT_KEY = re.compile(r"^(w[a-z0-9_]*|embed[a-z0-9_]*|unembed[a-z0-9_]*)$")
+
+
+def param_like(node: ast.AST, bindings: Dict[str, str]) -> Optional[str]:
+    """Does this operand look like a model parameter leaf? Keys on the
+    repo's weight naming convention (PR 3): param dict keys / attribute
+    names ``w*`` / ``embed*`` / ``unembed*``, or a local bound to one."""
+    node = unwrap_views(node)
+    if isinstance(node, ast.Attribute) and WEIGHT_KEY.match(node.attr):
+        return dotted_name(node) or f".{node.attr}"
+    if isinstance(node, ast.Subscript):
+        sl = node.slice
+        if (isinstance(sl, ast.Constant) and isinstance(sl.value, str)
+                and WEIGHT_KEY.match(sl.value)):
+            return f"{dotted_name(node.value) or '<expr>'}[{sl.value!r}]"
+    if isinstance(node, ast.Name) and node.id in bindings:
+        return bindings[node.id]
+    return None
+
+
+# rule modules import the helpers above, so they import last
+from .host_aliasing import HostAliasingRule          # noqa: E402
+from .raw_weight_einsum import RawWeightEinsumRule   # noqa: E402
+from .nondeterminism import NondeterminismRule       # noqa: E402
+from .unguarded_state_write import UnguardedStateWriteRule  # noqa: E402
+
+RULES = (
+    HostAliasingRule(),
+    RawWeightEinsumRule(),
+    NondeterminismRule(),
+    UnguardedStateWriteRule(),
+)
+
+RULE_IDS = tuple(r.rule_id for r in RULES)
+
+__all__ = ["RULES", "RULE_IDS", "HostAliasingRule", "RawWeightEinsumRule",
+           "NondeterminismRule", "UnguardedStateWriteRule", "dotted_name",
+           "unwrap_views", "functions", "direct_body", "module_body",
+           "in_repo_src", "inplace_mutations", "param_like", "WEIGHT_KEY"]

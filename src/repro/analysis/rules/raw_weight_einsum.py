@@ -1,0 +1,73 @@
+"""raw-weight-einsum: parameter contraction outside the projection API.
+
+The packed-coverage bypass (PR 3): every family serves packed quantised
+weights only because ``models.layers.linear`` / ``expert_matmul`` /
+``embed_lookup`` are the *single* way a parameter is contracted — a raw
+``jnp.einsum``/``@``/``dot_general`` against a param leaf either
+densifies packed codes or crashes on a ``PackedTensor``. Either way the
+format's bandwidth win silently disappears (format bugs surface as
+silent quality/perf loss, not crashes).
+
+The rule keys on the **operand**, not the op: an einsum is flagged only
+when one of its operands looks like a parameter leaf under the repo's
+weight naming convention — a ``w*``/``embed*``/``unembed*`` attribute
+(``p.w_router``), a string-keyed subscript (``params["wq"]``,
+``lp['w_down']``), or a local bound to one — optionally wrapped in
+``.astype(...)``/``.reshape(...)``. Activation-only einsums (attention
+scores, WKV/SSD chunk math, softmax probabilities) never match, so they
+need no pragma. Genuinely non-packable contractions carry
+``# lint: allow(raw-weight-einsum) <reason>``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from . import direct_body, dotted_name, functions, module_body, param_like
+
+_MATMUL_CALLEES = (".einsum", ".matmul", ".dot", ".dot_general",
+                   ".tensordot")
+
+
+class RawWeightEinsumRule:
+    rule_id = "raw-weight-einsum"
+    hint = ("route through layers.linear / layers.expert_matmul "
+            "(or '# lint: allow(raw-weight-einsum) <reason>' for a "
+            "genuinely non-packable contraction)")
+
+    def check(self, tree, src, path):
+        findings = []
+        scopes: List[List[ast.AST]] = [direct_body(fn)
+                                       for fn in functions(tree)]
+        scopes.append(module_body(tree))
+        for nodes in scopes:
+            bindings: Dict[str, str] = {}
+            for n in nodes:
+                if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                        and isinstance(n.targets[0], ast.Name):
+                    desc = param_like(n.value, {})
+                    if desc:
+                        bindings[n.targets[0].id] = desc
+            for n in nodes:
+                operands: List[ast.AST] = []
+                where = None
+                if isinstance(n, ast.Call):
+                    name = dotted_name(n.func)
+                    if any(name.endswith(c) for c in _MATMUL_CALLEES):
+                        operands = list(n.args)
+                        where = name.rsplit(".", 1)[-1]
+                elif isinstance(n, ast.BinOp) and isinstance(n.op,
+                                                             ast.MatMult):
+                    operands = [n.left, n.right]
+                    where = "@"
+                if not operands:
+                    continue
+                for op in operands:
+                    desc = param_like(op, bindings)
+                    if desc:
+                        findings.append((n.lineno, (
+                            f"raw {where} against param leaf {desc} "
+                            "bypasses the packed projection API — a "
+                            "PackedTensor here densifies (or fails)")))
+                        break
+        return findings

@@ -473,7 +473,7 @@ def _moe_block_local(x, p: MoeParams, cfg):
     E, k = cfg.n_experts, cfg.experts_per_token
     N = B * T
     xt = x.reshape(N, D)
-    logits = jnp.einsum("nd,de->ne", xt, p.w_router.astype(x.dtype))
+    logits = linear(xt[None], p.w_router, "btd,de->bte")[0]
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     gate_vals, choice = jax.lax.top_k(probs, k)          # (N, k)
     gate_vals = gate_vals / jnp.maximum(
@@ -553,7 +553,7 @@ def moe_block_ep(x, p: MoeParams, cfg):
         N = Bl * Tl
         E_loc = wg.shape[0]
         xt = xl.reshape(N, Dl)
-        logits = jnp.einsum("nd,de->ne", xt, wr.astype(xl.dtype))
+        logits = linear(xt[None], wr, "btd,de->bte")[0]
         logits = logits.astype(jnp.float32)
         if E_pad != E:  # mask dummy experts
             mask = (jnp.arange(E_pad) < E)
@@ -583,10 +583,10 @@ def moe_block_ep(x, p: MoeParams, cfg):
         buf = jnp.zeros((E_loc, cap, Dl), xl.dtype).at[
             local_e, safe_rank].add(contrib)
         dt = xl.dtype
-        g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(dt))
-        u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(dt))
+        g = expert_matmul(buf, wg, "ecd,edf->ecf")
+        u = expert_matmul(buf, wu, "ecd,edf->ecf")
         h = jax.nn.silu(g) * u
-        y = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))
+        y = expert_matmul(h, wd, "ecf,efd->ecd")
         y_tok = y[local_e, safe_rank]
         w = jnp.where(keep, gate_vals.reshape(-1), 0.0).astype(dt)
         out = jnp.zeros((N, Dl), dt).at[tok_idx].add(y_tok * w[:, None])

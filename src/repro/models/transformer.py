@@ -339,10 +339,16 @@ def pack_layouts(cfg: ModelConfig) -> dict:
         "['layers']['wk']": (1, 1),
         "['layers']['wv']": (1, 1),
         "['layers']['wo']": (1, 2),
-        "['layers']['w_gate']": (1, 1),
-        "['layers']['w_up']": (1, 1),
-        "['layers']['w_down']": (1, 1),
     }
+    if not cfg.n_experts:
+        # dense MLP only exists without experts (param_specs emits either
+        # the w_* MLP or the we_*/ws_* expert stacks, never both — the
+        # contract verifier checks every layout path resolves)
+        lay.update({
+            "['layers']['w_gate']": (1, 1),
+            "['layers']['w_up']": (1, 1),
+            "['layers']['w_down']": (1, 1),
+        })
     if cfg.n_experts:
         lay.update({
             "['layers']['we_gate']": (2, 1),

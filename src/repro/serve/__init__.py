@@ -210,6 +210,21 @@ afterthought. Every recovery path below has a deterministic injector in
     Flash-decode attention over a sequence-sharded KV cache (exact
     log-sum-exp combine), for caches too big for one device.
 
+Static enforcement
+------------------
+The invariants above are also enforced *statically*: ``repro.analysis``
+(run by ``scripts/run_tests.sh`` — default fast target and ``--lint``)
+lints the tree for the shipped serving bug classes — host-buffer aliasing
+into the jitted step, raw weight einsums that bypass the projection API,
+hidden-global nondeterminism in step paths, decode steps that skip the
+t_valid/reset protocol — and abstractly verifies every registered
+``ModelFamily``'s pack-layout / cache-spec / ragged-decode declarations
+against its actual callables. Host buffers the engine mutates in place
+(slot positions, reset masks) stage through ``engine.host_to_device`` —
+the one blessed snapshot-then-transfer helper; a bare ``jnp.asarray`` of
+such a buffer is a lint finding (see
+``src/repro/analysis/README.md``).
+
 Which tensors pack is declared per family (``ModelFamily.pack_layouts``)
 and checked per format (``QuantisationPlan.packable``): block-scaled
 codebooks of ≤256 codes whose output dim tiles by the scale block; ≤16
@@ -221,11 +236,12 @@ zamba2's 548-wide in_proj in smoke) are dequantised at load.
 from . import (cache, context_parallel, engine, faults,  # noqa: F401
                scheduler, traffic)
 from .cache import CacheGroup, CacheSpec, build_cache_spec
-from .engine import Request, ServeEngine, greedy_generate
+from .engine import Request, ServeEngine, greedy_generate, host_to_device
 from .scheduler import PrefixPool, Scheduler, StreamHandle
 from .traffic import TrafficSpec, Workload
 
 __all__ = ["cache", "context_parallel", "engine", "faults", "scheduler",
            "traffic", "CacheGroup", "CacheSpec", "build_cache_spec",
-           "Request", "ServeEngine", "greedy_generate", "PrefixPool",
-           "Scheduler", "StreamHandle", "TrafficSpec", "Workload"]
+           "Request", "ServeEngine", "greedy_generate", "host_to_device",
+           "PrefixPool", "Scheduler", "StreamHandle", "TrafficSpec",
+           "Workload"]

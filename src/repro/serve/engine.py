@@ -82,6 +82,18 @@ def alloc_decode_state(fam, cfg: ModelConfig, batch_slots: int, kv_len: int,
                         is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
+def host_to_device(buf: np.ndarray):
+    """The one blessed staging path for host buffers the engine mutates
+    in place (slot positions, reset masks). ``jnp.asarray`` may alias a
+    numpy buffer zero-copy on the CPU backend, so without a snapshot the
+    jitted step can observe mutations made *after* the step was assembled
+    — the PR 4 ``_slot_pos``/``_needs_reset`` aliasing bug. The static
+    ``host-aliasing`` rule (``repro.analysis``) flags direct
+    ``jnp.asarray`` of an in-place-mutated buffer; routing through this
+    helper is the sanctioned escape hatch."""
+    return jnp.asarray(buf.copy())
+
+
 @dataclass
 class Request:
     prompt: List[int]
@@ -484,10 +496,9 @@ class ServeEngine:
                 v = 1
                 toks[i, 0] = g.tokens[-1]
             t_valid[i] = v
-        # .copy(): jnp.asarray may alias a numpy buffer zero-copy on
-        # CPU, and _slot_pos/_needs_reset are mutated in place below —
-        # the device computation must see this iteration's snapshot
-        self._state["pos"] = jnp.asarray(self._slot_pos.copy())
+        # _slot_pos/_needs_reset are mutated in place below; the device
+        # must see this iteration's snapshot (see host_to_device)
+        self._state["pos"] = host_to_device(self._slot_pos)
         batch = {"tokens": jnp.asarray(toks),
                  "t_valid": jnp.asarray(t_valid)}
         # "reset" rides only on steps that admitted (or quarantined) a
@@ -497,7 +508,7 @@ class ServeEngine:
         # once per engine lifetime; a quarantine on a decode step may
         # add the rare fourth (T=1 + reset).
         if self._needs_reset.any():
-            batch["reset"] = jnp.asarray(self._needs_reset.copy())
+            batch["reset"] = host_to_device(self._needs_reset)
             self._needs_reset[:] = False
         ts = time.monotonic()
         logits, self._state = self._execute_step(batch)

@@ -58,7 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.engine import (Generation, Request, ServeEngine,
-                                alloc_decode_state)
+                                alloc_decode_state, host_to_device)
 
 
 # ---------------------------------------------------------------------------
@@ -186,7 +186,9 @@ class PrefixPool:
             toks[0, :v] = tokens[consumed:consumed + v]
             t_valid = np.zeros(eng.B, np.int32)
             t_valid[0] = v
-            state["pos"] = jnp.asarray(pos.copy())
+            # pos is mutated in place after each chunk (host_to_device
+            # snapshots it away from the zero-copy aliasing bug class)
+            state["pos"] = host_to_device(pos)
             _, state = eng._step(eng.params, state,
                                  {"tokens": jnp.asarray(toks),
                                   "t_valid": jnp.asarray(t_valid)})

@@ -1,0 +1,36 @@
+"""Lint fixture: the PR 4 zero-copy aliasing bug, minimally reproduced.
+
+``# EXPECT: <rule-id>`` markers drive tests/test_analysis.py — the linter
+must flag exactly these lines with exactly these rule ids.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+class MiniEngine:
+    """Persistent host buffers staged without a snapshot — the device may
+    observe mutations made after the step was dispatched."""
+
+    def __init__(self, n):
+        self._slot_pos = np.zeros(n, np.int32)
+        self._needs_reset = np.zeros(n, bool)
+
+    def step(self, state, tokens):
+        state["pos"] = jnp.asarray(self._slot_pos)  # EXPECT: host-aliasing
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "reset": jnp.asarray(self._needs_reset),  # EXPECT: host-aliasing
+        }
+        self._needs_reset[:] = False
+        self._slot_pos[0] += 1
+        return state, batch
+
+
+def replay_chunks(buf, chunks):
+    """Loop-carried buffer: the mutation is textually before the staging
+    call, but aliases into the next iteration's device view."""
+    out = []
+    for c in chunks:
+        buf[0] += c
+        out.append(jnp.asarray(buf))  # EXPECT: host-aliasing
+    return out

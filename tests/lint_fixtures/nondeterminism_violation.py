@@ -1,0 +1,22 @@
+"""Lint fixture: nondeterminism in step/serve paths — unseeded legacy
+numpy RNG, stdlib random, and wall-clock time used as data."""
+import random
+import time
+
+import numpy as np
+
+
+def sample_token(logits):
+    if random.random() < 0.1:  # EXPECT: nondeterminism
+        return 0
+    noise = np.random.gumbel(size=logits.shape)  # EXPECT: nondeterminism
+    return int(np.argmax(logits + noise))
+
+
+def make_request_id():
+    return int(time.time() * 1e6)  # EXPECT: nondeterminism
+
+
+def shuffle_slots(slots):
+    np.random.shuffle(slots)  # EXPECT: nondeterminism
+    return slots

@@ -1,0 +1,28 @@
+"""Lint fixture (clean twin): activation-only einsums and API-routed
+weight applications — zero findings expected, zero pragmas needed."""
+import jax.numpy as jnp
+
+
+def linear(x, w, spec):
+    """Stand-in for layers.linear (the blessed projection API)."""
+    return jnp.einsum(spec, x, w)
+
+
+def attention_scores(qg, k_cache, v_cache):
+    # attention math contracts activations against *cache* state, not
+    # params — the rule keys on param-leaf operands and stays silent
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(qg.dtype))
+    p = jnp.exp(s - s.max(-1, keepdims=True))  # softmax numerator; p is a Name
+    return jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
+
+
+def projections(x, lp):
+    q = linear(x, lp["wq"], "btd,dnh->btnh")
+    o = linear(q, lp["wo"], "btnh,nhd->btd")
+    return o
+
+
+def annotated_bonus(rs, ks, p):
+    # a genuinely non-packable per-head bonus vector, documented in place
+    u = p.w_bonus  # lint: allow(raw-weight-einsum) (H, hd) bonus vector, below the quantisable floor
+    return jnp.einsum("bthi,hi->bth", rs * ks, u)  # lint: allow(raw-weight-einsum) (H, hd) bonus vector, below the quantisable floor

@@ -1,0 +1,19 @@
+"""Lint fixture: raw weight contractions that bypass ``layers.linear`` —
+the packed-coverage bypass (a PackedTensor leaf here densifies or
+crashes)."""
+import jax.numpy as jnp
+
+
+def attn_out(x, params, lp):
+    y = jnp.einsum("btd,dk->btk", x, params["wq"])  # EXPECT: raw-weight-einsum
+    w = lp["w_down"]
+    z = jnp.einsum("btk,kd->btd", y, w.astype(x.dtype))  # EXPECT: raw-weight-einsum
+    return z
+
+
+def unembed(x, params):
+    return x @ params["embed"].astype(x.dtype).T  # EXPECT: raw-weight-einsum
+
+
+def router(xt, p):
+    return jnp.einsum("nd,de->ne", xt, p.w_router)  # EXPECT: raw-weight-einsum

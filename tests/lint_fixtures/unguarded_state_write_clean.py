@@ -1,0 +1,36 @@
+"""Lint fixture (clean twin): decode steps that honour the ragged
+protocol — via the shared prologue, by masking on t_valid/reset
+directly, or by delegating to a guarded inner step."""
+import jax.numpy as jnp
+
+
+def ragged_prologue(state, batch):
+    """Stand-in for models.api.ragged_prologue."""
+    reset = batch.get("reset")
+    if reset is not None:
+        state = {k: jnp.where(reset[:, None], 0, v) for k, v in state.items()}
+    return state, batch.get("t_valid")
+
+
+def decode_step(params, state, batch):
+    state, t_valid = ragged_prologue(state, batch)
+    x = batch["tokens"]
+    h = jnp.tanh(state["h"] + x.sum(-1, keepdims=True))
+    step = 1 if t_valid is None else (t_valid > 0).astype(jnp.int32)
+    state = dict(state, h=h, pos=state["pos"] + step)
+    return h, state
+
+
+def masked_decode_step(params, state, batch):
+    # inline guard: both protocol keys consulted before any state write
+    t_valid = batch["t_valid"]
+    reset = batch["reset"]
+    h0 = jnp.where(reset[:, None], 0.0, state["h"])
+    h = h0 * 0.9 + batch["tokens"].mean(-1, keepdims=True)
+    h = jnp.where((t_valid > 0)[:, None], h, h0)
+    return h, dict(state, h=h)
+
+
+def outer_decode_step(params, state, batch):
+    # delegation: the guarded inner step owns the protocol
+    return masked_decode_step(params, state, batch)

@@ -1,0 +1,15 @@
+"""Lint fixture: a decode step that updates recurrent state without the
+t_valid/reset ragged-batch protocol — stale slots keep advancing."""
+import jax.numpy as jnp
+
+
+def decode_step(params, state, batch):  # EXPECT: unguarded-state-write
+    x = batch["tokens"]
+    h = jnp.tanh(state["h"] + x.sum(-1, keepdims=True))
+    state = dict(state, h=h, pos=state["pos"] + x.shape[1])
+    return h, state
+
+
+def rnn_decode_step(params, state, batch):  # EXPECT: unguarded-state-write
+    h = state["h"] * 0.9 + batch["tokens"].mean(-1, keepdims=True)
+    return h, dict(state, h=h)

@@ -1,0 +1,264 @@
+"""Tests for repro.analysis: lint rules against the fixture corpus,
+pragma/baseline suppression layers, CLI exit codes, and the registry
+contract verifier (clean run + injected-violation negatives)."""
+import dataclasses
+import json
+import re
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import contracts as contracts_mod
+from repro.analysis import lint as lint_mod
+from repro.analysis.lint import Finding, lint_file, partition, save_baseline
+from repro.analysis.rules import RULE_IDS
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "lint_fixtures"
+_EXPECT = re.compile(r"#\s*EXPECT:\s*([a-z][a-z0-9\-]*)")
+
+VIOLATION_FILES = sorted(FIXTURES.glob("*_violation.py"))
+CLEAN_FILES = sorted(FIXTURES.glob("*_clean.py"))
+
+
+def expected_findings(path: Path):
+    """(rule_id, line) pairs declared by ``# EXPECT:`` trailing markers."""
+    out = []
+    for i, text in enumerate(path.read_text().splitlines(), start=1):
+        m = _EXPECT.search(text)
+        if m:
+            out.append((m.group(1), i))
+    return sorted(out)
+
+
+def run_cli(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"})
+
+
+# ---------------------------------------------------------------------------
+# Lint rules vs the fixture corpus
+# ---------------------------------------------------------------------------
+
+class TestFixtures:
+    def test_corpus_is_paired(self):
+        """Every rule has a violation file and a clean twin."""
+        stems = {p.stem for p in FIXTURES.glob("*.py")}
+        for rid in RULE_IDS:
+            base = rid.replace("-", "_")
+            assert f"{base}_violation" in stems, rid
+            assert f"{base}_clean" in stems, rid
+
+    @pytest.mark.parametrize("path", VIOLATION_FILES,
+                             ids=lambda p: p.stem)
+    def test_violations_hit_exact_rule_and_line(self, path):
+        want = expected_findings(path)
+        assert want, f"{path.name} declares no EXPECT markers"
+        got = sorted((f.rule, f.line) for f in lint_file(str(path)))
+        assert got == want
+
+    @pytest.mark.parametrize("path", CLEAN_FILES, ids=lambda p: p.stem)
+    def test_clean_twins_have_zero_findings(self, path):
+        assert lint_file(str(path)) == []
+
+
+# ---------------------------------------------------------------------------
+# Pragmas
+# ---------------------------------------------------------------------------
+
+class TestPragmas:
+    def _lint_src(self, tmp_path, src):
+        f = tmp_path / "snippet.py"
+        f.write_text(src)
+        return lint_file(str(f))
+
+    def test_pragma_with_reason_suppresses(self, tmp_path):
+        fs = self._lint_src(tmp_path, (
+            "import numpy as np\n"
+            "x = np.random.normal()"
+            "  # lint: allow(nondeterminism) demo-only jitter\n"))
+        assert fs == []
+
+    def test_pragma_on_line_above_suppresses(self, tmp_path):
+        fs = self._lint_src(tmp_path, (
+            "import numpy as np\n"
+            "# lint: allow(nondeterminism) demo-only jitter\n"
+            "x = np.random.normal()\n"))
+        assert fs == []
+
+    def test_reasonless_pragma_does_not_suppress(self, tmp_path):
+        fs = self._lint_src(tmp_path, (
+            "import numpy as np\n"
+            "x = np.random.normal()  # lint: allow(nondeterminism)\n"))
+        rules = sorted(f.rule for f in fs)
+        assert rules == ["bad-pragma", "nondeterminism"]
+
+    def test_unknown_rule_id_is_bad_pragma(self, tmp_path):
+        fs = self._lint_src(tmp_path, (
+            "x = 1  # lint: allow(no-such-rule) because reasons\n"))
+        assert [f.rule for f in fs] == ["bad-pragma"]
+        assert "no-such-rule" in fs[0].message
+
+    def test_docstring_pragma_text_is_inert(self, tmp_path):
+        """Prose *describing* the pragma syntax (docstrings, strings) must
+        neither suppress nor trip bad-pragma — only real comments count."""
+        fs = self._lint_src(tmp_path, (
+            '"""Write # lint: allow(no-such-rule) to suppress."""\n'
+            's = "# lint: allow(nondeterminism)"\n'))
+        assert fs == []
+
+    def test_syntax_error_is_a_finding_not_a_crash(self, tmp_path):
+        fs = self._lint_src(tmp_path, "def broken(:\n")
+        assert [f.rule for f in fs] == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# Baseline ratchet
+# ---------------------------------------------------------------------------
+
+class TestBaseline:
+    def test_partition_tolerates_small_line_drift(self):
+        f = Finding("a.py", 10, "nondeterminism", "m")
+        base = [{"rule": "nondeterminism", "path": "a.py", "line": 12}]
+        new, old = partition([f], base)
+        assert (new, old) == ([], [f])
+
+    def test_partition_rejects_large_drift_and_other_rules(self):
+        f = Finding("a.py", 10, "nondeterminism", "m")
+        new, _ = partition([f], [
+            {"rule": "nondeterminism", "path": "a.py", "line": 13},
+            {"rule": "host-aliasing", "path": "a.py", "line": 10},
+            {"rule": "nondeterminism", "path": "b.py", "line": 10}])
+        assert new == [f]
+
+    def test_checked_in_baseline_is_empty(self):
+        assert json.loads(lint_mod.DEFAULT_BASELINE.read_text()) == []
+
+    def test_baselined_findings_do_not_fail_cli(self, tmp_path):
+        target = FIXTURES / "nondeterminism_violation.py"
+        bl = tmp_path / "baseline.json"
+        save_baseline(lint_file(str(target)), bl)
+        r = run_cli(str(target), "--no-contracts", "--baseline", str(bl))
+        assert r.returncode == 0, r.stdout + r.stderr
+        r = run_cli(str(target), "--no-contracts")  # empty default baseline
+        assert r.returncode == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+class TestCli:
+    def test_src_is_lint_clean(self):
+        r = run_cli("src", "--no-contracts")
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "lint OK" in r.stdout
+
+    def test_findings_name_rule_and_location(self):
+        r = run_cli(str(FIXTURES), "--no-contracts")
+        assert r.returncode == 1
+        for rid in RULE_IDS:
+            assert f"[{rid}]" in r.stdout, rid
+        assert re.search(r"host_aliasing_violation\.py:\d+:", r.stdout)
+
+    def test_violation_copied_into_src_fails_the_gate(self):
+        """Acceptance check: dropping any fixture violation into src/
+        must turn the gate red, naming rule id + file:line."""
+        staged = [(p, REPO / "src" / "repro" / "serve" / f"_lintcheck_{p.name}")
+                  for p in VIOLATION_FILES]
+        try:
+            for src_f, dst in staged:
+                shutil.copy(src_f, dst)
+            r = run_cli("src", "--no-contracts")
+            assert r.returncode == 1, r.stdout + r.stderr
+            for src_f, dst in staged:
+                for rid, line in expected_findings(src_f):
+                    assert f"src/repro/serve/{dst.name}:{line}: [{rid}]" \
+                        in r.stdout, (dst.name, rid, line)
+        finally:
+            for _, dst in staged:
+                dst.unlink(missing_ok=True)
+
+    def test_unknown_family_tag_exits_2(self):
+        r = run_cli("--contracts-only", "--family", "no-such-arch")
+        assert r.returncode == 2
+        assert "no-such-arch" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# host_to_device (satellite of the host-aliasing rule)
+# ---------------------------------------------------------------------------
+
+class TestHostToDevice:
+    def test_snapshots_against_later_host_mutation(self):
+        from repro.serve.engine import host_to_device
+        buf = np.arange(4, dtype=np.int32)
+        dev = host_to_device(buf)
+        buf[:] = -1
+        assert np.array_equal(np.asarray(dev), [0, 1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# Registry contract verifier
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def all_reports():
+    return contracts_mod.verify_all()
+
+
+class TestContracts:
+    def test_full_matrix_is_clean(self, all_reports):
+        bad = [(r.tag, [f.message for f in r.findings])
+               for r in all_reports if not r.ok]
+        assert not bad, bad
+
+    def test_matrix_covers_every_registered_family(self, all_reports):
+        from repro.models import api as mapi
+        covered = {r.family for r in all_reports}
+        assert set(mapi._FAMILIES) <= covered
+
+    def test_matrix_spans_the_serving_bench_tags(self, all_reports):
+        assert len({r.tag for r in all_reports}) >= 6
+
+    def test_broken_pack_layouts_is_caught(self, monkeypatch):
+        from repro.models import api as mapi
+        tag, cfg = next((t, c) for t, c in contracts_mod.default_matrix()
+                        if c.family == "transformer")
+        fam = mapi.get_family("transformer")
+        broken = dataclasses.replace(
+            fam, pack_layouts=lambda cfg: {"['layers']['w_ghost']": (1, 1)})
+        monkeypatch.setitem(mapi._FAMILIES, "transformer", broken)
+        rep = contracts_mod.verify_family(tag, cfg)
+        assert not rep.ok
+        assert any("w_ghost" in f.message for f in rep.findings)
+
+    def test_missing_pos_spec_is_caught(self, monkeypatch):
+        from repro.models import api as mapi
+        tag, cfg = next((t, c) for t, c in contracts_mod.default_matrix()
+                        if c.family == "transformer")
+        fam = mapi.get_family("transformer")
+        orig = fam.decode_state_specs
+        broken = dataclasses.replace(
+            fam, decode_state_specs=lambda *a, **k: {
+                k2: v for k2, v in orig(*a, **k).items() if k2 != "pos"})
+        monkeypatch.setitem(mapi._FAMILIES, "transformer", broken)
+        rep = contracts_mod.verify_family(tag, cfg)
+        assert any("pos" in f.message for f in rep.findings)
+
+    def test_uncovered_family_is_a_registry_finding(self, monkeypatch):
+        from repro.models import api as mapi
+        fam = mapi.get_family("transformer")
+        monkeypatch.setitem(mapi._FAMILIES, "ghost-family",
+                            dataclasses.replace(fam, name="ghost-family"))
+        reports = contracts_mod.verify_all()
+        reg = [r for r in reports if r.tag == "registry"]
+        assert reg and not reg[0].ok
+        assert "ghost-family" in reg[0].family
