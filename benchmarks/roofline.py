@@ -179,12 +179,79 @@ def run_dequant():
     return rows
 
 
+# --------------------------------------------------------------- decode attn
+
+def attn_rows(batches=(1, 2, 4, 8), kv_len=64):
+    """Decode-attention HBM roofline per serve-bench shape: the cache
+    bytes one decode step streams (every live KV row of every layer) under
+    each storage format — dense f32/bf16 vs the block-scaled q8/q4 code +
+    scale stream the flash-decode kernel reads instead. Attention FLOPs
+    are format-independent (2·QK^T + 2·PV per head), so at decode's tiny
+    arithmetic intensity the byte cut IS the predicted speedup; ``t_hbm_s``
+    renders each stream at the HBM bandwidth for the roofline table."""
+    from repro import configs
+    from repro.serve.cache import kv_bits
+    cfg = configs.get_config("paper-100m", "full")
+    L, K, H, hd = cfg.n_layers, cfg.n_kv_heads, cfg.n_heads, cfg.hd
+    rows = []
+    for B in batches:
+        rows_live = L * B * kv_len * K        # (token, head) KV rows read
+        flops = 2 * L * B * H * kv_len * hd * 2   # QK^T + PV, per step
+        for fmt in ("f32", "bf16", "q8", "q4"):
+            if fmt in ("f32", "bf16"):
+                row_bytes = hd * (4 if fmt == "f32" else 2)
+            else:
+                bits = kv_bits(fmt)
+                row_bytes = hd * bits // 8 + 4    # codes + one f32 scale
+            hbm = 2 * rows_live * row_bytes       # k and v streams
+            rows.append(dict(
+                shape=f"decode/b{B}", batch=B, kv_len=kv_len, fmt=fmt,
+                kv_rows=rows_live, row_bytes=row_bytes, hbm_bytes=hbm,
+                attn_flops=flops,
+                t_hbm_s=hbm / HBM_BW,
+                intensity_flops_per_byte=round(flops / hbm, 3)))
+    # per batch, the cut each quantised stream delivers vs the f32 cache
+    by = {(r["batch"], r["fmt"]): r for r in rows}
+    for r in rows:
+        base = by[(r["batch"], "f32")]["hbm_bytes"]
+        r["stream_cut_vs_f32"] = round(base / r["hbm_bytes"], 2)
+    return rows
+
+
+def attn_markdown(rows) -> str:
+    hdr = ("| shape | fmt | KV rows | bytes/row | HBM bytes | t_hbm | "
+           "FLOPs/byte | cut vs f32 |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['shape']} | {r['fmt']} | {r['kv_rows']} | "
+            f"{r['row_bytes']} | {r['hbm_bytes']:,} | "
+            f"{r['t_hbm_s']:.3g} | {r['intensity_flops_per_byte']} | "
+            f"{r['stream_cut_vs_f32']}× |")
+    return "\n".join(lines)
+
+
+def run_attn():
+    rows = attn_rows()
+    os.makedirs("results/bench", exist_ok=True)
+    with open("results/bench/roofline_attn.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--dequant", action="store_true",
                     help="print only the packed-serving dequant table")
+    ap.add_argument("--attn", action="store_true",
+                    help="print only the decode-attention HBM table "
+                         "(quantised vs dense KV streams per serve shape; "
+                         "written to results/bench/roofline_attn.json)")
     args = ap.parse_args()
-    if not args.dequant:
-        print(markdown_table(run()))
-    print(dequant_markdown(run_dequant()))
+    if args.attn:
+        print(attn_markdown(run_attn()))
+    else:
+        if not args.dequant:
+            print(markdown_table(run()))
+        print(dequant_markdown(run_dequant()))

@@ -180,6 +180,8 @@ def _bench_pair(tag, cfg, fmt, reqs, **eng_kw):
                    # grouped decode-cache accounting: windowed ring groups
                    # vs the uniform full-length baseline (serve.cache)
                    cache_kv_bytes=cb["kv"],
+                   cache_code_bytes=cb["code_bytes"],
+                   cache_scale_bytes=cb["scale_bytes"],
                    cache_uniform_kv_bytes=cb["uniform_kv"],
                    cache_ratio_vs_uniform=cb["cache_ratio_vs_uniform"],
                    cache_groups=cb["cache_groups"],
@@ -288,6 +290,93 @@ def run_batch_sweep(fast: bool = True, batches=None, reps=None):
               f"packed {row['packed4_tokens_per_s']} tok/s, "
               f"ratio {row['ratio']}, "
               f"identical={row['tokens_identical']}")
+        rows.append(row)
+    return rows
+
+
+# quantised-KV sweep gates: q8 greedy tokens may drift from the f32 cache
+# by at most this fraction of emitted tokens (measured 0 on the full
+# config; the bound leaves room for benign argmax near-ties), and the
+# quantised resident KV must come in under this fraction of the f32 cache
+# on the all-global full config (q8 at hd=64 is (1 + 4/64)/4 ≈ 0.266)
+KV_DRIFT_MAX_Q8 = 0.05
+KV_RATIO_MAX = 0.35
+
+
+def _token_drift(a: dict, b: dict) -> int:
+    """Greedy-token drift between two {rid: tokens} maps: positions that
+    disagree plus any length mismatch."""
+    drift = 0
+    for rid in a:
+        ta, tb = a[rid], b.get(rid, [])
+        drift += sum(x != y for x, y in zip(ta, tb))
+        drift += abs(len(ta) - len(tb))
+    return drift
+
+
+def run_kv_sweep(fast: bool = True, batches=None, reps=None):
+    """Quantised-KV sweep on the **full** paper-100m config (f32 dtype so
+    the dense cache IS the f32 baseline): per batch size, engines serving
+    identical requests from an f32, q8 and q4 KV cache, plus the
+    ``quantised_cache=False`` kill-switch engine (kv_format set but
+    dropped at engine build). Rows (``path="kv_sweep/paper-100m/b{B}"``)
+    carry per-format resident cache bytes (code/scale split), tokens/s,
+    greedy-token drift vs the f32 cache, and the kill-switch identity bit;
+    ``check()`` gates q8 drift ≤ {KV_DRIFT_MAX_Q8:.0%} of emitted tokens,
+    quantised KV ≤ {KV_RATIO_MAX}x the f32 cache, and the kill-switch
+    bit-identical at every swept batch size."""
+    batches = tuple(batches) if batches else ((1, 4) if fast else
+                                              SWEEP_BATCHES)
+    reps = reps or (2 if fast else SWEEP_REPS)
+    cfg0 = configs.get_config("paper-100m", "full").replace(
+        dtype="float32", param_dtype="float32")
+    fam = mapi.get_family(cfg0.family)
+    params = fam.init(jax.random.PRNGKey(0), cfg0)
+    rng = np.random.default_rng(2)
+    rows = []
+    for B in batches:
+        eng_kw = dict(batch_slots=B, kv_len=SWEEP_KV,
+                      prefill_chunk=SWEEP_CHUNK)
+        engines = [("f32", ServeEngine(cfg0, params, **eng_kw))]
+        for fmt in ("q8", "q4"):
+            engines.append((fmt, ServeEngine(
+                cfg0.replace(kv_format=fmt), params, **eng_kw)))
+        # kill-switch: the config asks for a quantised cache, the engine
+        # refuses — must reproduce the dense path bit for bit
+        engines.append(("killswitch", ServeEngine(
+            cfg0.replace(kv_format="q8"), params, quantised_cache=False,
+            **eng_kw)))
+        reqs = [Request(prompt=rng.integers(0, cfg0.vocab, 8).tolist(),
+                        max_new_tokens=SWEEP_NEW, rid=i) for i in range(B)]
+        med, _, dones = _drive_interleaved(engines, reqs, reps=reps)
+        outs = {n: {g.rid: g.tokens for g in d} for n, d in dones.items()}
+        total = sum(len(t) for t in outs["f32"].values())
+        caches = {n: e.cache_bytes() for n, e in engines}
+        row = dict(path=f"kv_sweep/paper-100m/b{B}", batch=B,
+                   total_tokens=total, reps=reps, max_new=SWEEP_NEW,
+                   kv_len=SWEEP_KV, prefill_chunk=SWEEP_CHUNK,
+                   f32_kv_bytes=caches["f32"]["kv"],
+                   f32_tokens_per_s=round(med["f32"], 1),
+                   killswitch_identical=outs["killswitch"] == outs["f32"],
+                   killswitch_kv_bytes=caches["killswitch"]["kv"])
+        for fmt in ("q8", "q4"):
+            cb = caches[fmt]
+            row.update({
+                f"{fmt}_kv_bytes": cb["kv"],
+                f"{fmt}_code_bytes": cb["code_bytes"],
+                f"{fmt}_scale_bytes": cb["scale_bytes"],
+                # cfg dtype is float32 here, so dense IS the f32 baseline
+                f"{fmt}_ratio_vs_f32": cb["cache_ratio_vs_dense"],
+                f"{fmt}_tokens_per_s": round(med[fmt], 1),
+                f"{fmt}_drift_tokens": _token_drift(outs["f32"], outs[fmt]),
+            })
+        print(f"[kv-sweep] B={B}: f32 {row['f32_kv_bytes']:,} B @ "
+              f"{row['f32_tokens_per_s']} tok/s; q8 "
+              f"{row['q8_kv_bytes']:,} B ({row['q8_ratio_vs_f32']}x) "
+              f"drift {row['q8_drift_tokens']}/{total}; q4 "
+              f"{row['q4_kv_bytes']:,} B ({row['q4_ratio_vs_f32']}x) "
+              f"drift {row['q4_drift_tokens']}/{total}; "
+              f"killswitch identical={row['killswitch_identical']}")
         rows.append(row)
     return rows
 
@@ -501,7 +590,7 @@ def _write_bench_serve(rows):
     the existing record so other entries survive."""
     rec = {"bench": "serve_packed", "paths": {},
            "resident_ratio_vs_f32": {}, "batch_sweep": {},
-           "fault_drill": {}, "traffic": {}}
+           "kv_sweep": {}, "fault_drill": {}, "traffic": {}}
     if os.path.exists(BENCH_SERVE_OUT):
         try:
             with open(BENCH_SERVE_OUT) as f:
@@ -511,12 +600,17 @@ def _write_bench_serve(rows):
                 rec["resident_ratio_vs_f32"].update(
                     old.get("resident_ratio_vs_f32", {}))
                 rec["batch_sweep"].update(old.get("batch_sweep", {}))
+                rec["kv_sweep"].update(old.get("kv_sweep", {}))
                 rec["fault_drill"].update(old.get("fault_drill", {}))
                 rec["traffic"].update(old.get("traffic", {}))
         except (json.JSONDecodeError, OSError):
             pass
     for r in rows:
-        if r["path"].startswith("sweep/"):
+        if r["path"].startswith("kv_sweep/"):
+            tag = r["path"].split("/")[1]
+            rec["kv_sweep"].setdefault(tag, {})[str(r["batch"])] = {
+                k: v for k, v in r.items() if k not in ("path", "batch")}
+        elif r["path"].startswith("sweep/"):
             tag = r["path"].split("/")[1]
             rec["batch_sweep"].setdefault(tag, {})[str(r["batch"])] = {
                 k: v for k, v in r.items() if k not in ("path", "batch")}
@@ -564,6 +658,33 @@ _CACHE_RATIO_CEILING = {"gemma3": 0.25}
 
 def check(rows):
     fails = []
+    # quantised-KV sweep: quantised resident KV strictly under (and within
+    # KV_RATIO_MAX of) the f32 cache, q8 greedy drift within the gated
+    # bound, and the quantised_cache=False kill-switch bit-identical to
+    # the dense path at EVERY swept batch size
+    for r in rows:
+        if not r["path"].startswith("kv_sweep/"):
+            continue
+        for fmt in ("q8", "q4"):
+            if r[f"{fmt}_kv_bytes"] >= r["f32_kv_bytes"]:
+                fails.append(f"{r['path']}: {fmt} cache "
+                             f"{r[f'{fmt}_kv_bytes']:,} B is not under the "
+                             f"f32 {r['f32_kv_bytes']:,} B")
+            if r[f"{fmt}_ratio_vs_f32"] > KV_RATIO_MAX:
+                fails.append(f"{r['path']}: {fmt} cache at "
+                             f"{r[f'{fmt}_ratio_vs_f32']}x of f32 "
+                             f"(> {KV_RATIO_MAX})")
+        if r["q8_drift_tokens"] > KV_DRIFT_MAX_Q8 * r["total_tokens"]:
+            fails.append(f"{r['path']}: q8 greedy drift "
+                         f"{r['q8_drift_tokens']}/{r['total_tokens']} "
+                         f"tokens (> {KV_DRIFT_MAX_Q8:.0%})")
+        if not r["killswitch_identical"]:
+            fails.append(f"{r['path']}: quantised_cache=False engine is "
+                         "not bit-identical to the dense path")
+        if r["killswitch_kv_bytes"] != r["f32_kv_bytes"]:
+            fails.append(f"{r['path']}: kill-switch engine allocated "
+                         f"{r['killswitch_kv_bytes']:,} B, expected the "
+                         f"dense {r['f32_kv_bytes']:,} B")
     # decode batch sweep: the speed claim. Packed must be at least as fast
     # as the f32 path at EVERY swept batch size, on identical greedy tokens
     for r in rows:
@@ -613,7 +734,7 @@ def check(rows):
                          "state")
     by = {r["path"]: r for r in rows}
     tags = ({r["path"].split("/")[0] for r in rows}
-            - {"sweep", "fault_drill", "traffic"})
+            - {"sweep", "kv_sweep", "fault_drill", "traffic"})
     for tag in sorted(tags):
         if not by[f"{tag}/tokens_identical"]["value"]:
             fails.append(f"{tag}: packed and dense engines disagree on "
@@ -658,6 +779,14 @@ if __name__ == "__main__":
     ap.add_argument("--sweep-only", action="store_true",
                     help="run only the decode batch sweep + its ratio check "
                          "(part of the run_tests.sh --bench-smoke target)")
+    ap.add_argument("--kv-sweep", action="store_true",
+                    help="run the quantised-KV sweep (f32 vs q8 vs q4 cache "
+                         "on the full paper-100m config: resident cache "
+                         "bytes with the code/scale split, tokens/s, greedy "
+                         "drift vs the f32 cache, and the "
+                         "quantised_cache=False kill-switch identity; "
+                         "recorded in BENCH_serve.json 'kv_sweep' and gated "
+                         "by check()); combines with the other modes")
     ap.add_argument("--fault-drill", action="store_true",
                     help="run the serving fault drill (injected checkpoint "
                          "corruption / NaN slot / step failure; recovery "
@@ -675,10 +804,12 @@ if __name__ == "__main__":
     ap.add_argument("--traffic-seed", type=int, default=0,
                     help="workload seed for --traffic (default 0)")
     args = ap.parse_args()
-    if args.sweep_only or args.fault_drill or args.traffic:
+    if args.sweep_only or args.kv_sweep or args.fault_drill or args.traffic:
         rows = []
         if args.sweep_only:
             rows += run_batch_sweep(fast=not args.full)
+        if args.kv_sweep:
+            rows += run_kv_sweep(fast=not args.full)
         if args.fault_drill:
             rows += run_fault_drill(fast=not args.full)
         if args.traffic:

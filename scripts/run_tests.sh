@@ -43,18 +43,29 @@
 #                                   submit/stream lifecycle, expiry
 #                                   accounting, deterministic traffic
 #                                   replay)
+#   scripts/run_tests.sh --kv       quantised KV cache tests only (fused
+#                                   flash-decode kernel parity vs oracle,
+#                                   write-path bit identity, format parsing
+#                                   + cache accounting, Fisher format
+#                                   allocation, per-family greedy drift,
+#                                   quantised prefix forks, slot-reset
+#                                   isolation, quantised_cache kill-switch)
 #   scripts/run_tests.sh --bench-smoke
 #                                   smallest decode batch sweep (full-size
 #                                   paper-100m, reduced batch points/reps)
-#                                   plus the fault drill and the seeded
-#                                   traffic replay: enforces packed ≥ f32
-#                                   tokens/s at every swept batch size with
-#                                   identical greedy tokens, every
-#                                   injected-fault recovery, goodput > 0
-#                                   with no starvation, bit-deterministic
-#                                   replay across two runs, and prefix
-#                                   reuse strictly cheaper than recompute;
-#                                   exits non-zero on violation
+#                                   plus the fault drill, the seeded
+#                                   traffic replay and the KV-format sweep:
+#                                   enforces packed ≥ f32 tokens/s at every
+#                                   swept batch size with identical greedy
+#                                   tokens, every injected-fault recovery,
+#                                   goodput > 0 with no starvation,
+#                                   bit-deterministic replay across two
+#                                   runs, prefix reuse strictly cheaper
+#                                   than recompute, quantised KV ≤ 0.35×
+#                                   the f32 cache with bounded q8 drift,
+#                                   and a bit-identical quantised_cache=
+#                                   False kill-switch; exits non-zero on
+#                                   violation
 #   scripts/run_tests.sh [pytest args...]   any first argument that is not
 #                                   a target flag above (e.g. -k, -x, a
 #                                   test path) forwards untouched to the
@@ -77,7 +88,7 @@ if [ "${1:-}" = "--serve" ]; then
     shift
     exec python -m pytest -q tests/test_serve.py tests/test_serve_ragged.py \
         tests/test_serve_windowed.py tests/test_serve_faults.py \
-        tests/test_serve_traffic.py "$@"
+        tests/test_serve_traffic.py tests/test_serve_kv_quant.py "$@"
 fi
 if [ "${1:-}" = "--windowed" ]; then
     shift
@@ -91,10 +102,14 @@ if [ "${1:-}" = "--traffic" ]; then
     shift
     exec python -m pytest -q tests/test_serve_traffic.py "$@"
 fi
+if [ "${1:-}" = "--kv" ]; then
+    shift
+    exec python -m pytest -q tests/test_serve_kv_quant.py "$@"
+fi
 if [ "${1:-}" = "--bench-smoke" ]; then
     shift
     exec python -m benchmarks.serve_packed --sweep-only --fault-drill \
-        --traffic "$@"
+        --traffic --kv-sweep "$@"
 fi
 if [ "${1:-}" = "--lint" ]; then
     shift

@@ -167,6 +167,66 @@ def verify_family(tag: str, cfg, *, batch: int = 2, kv_len: int = 24,
                  f"declared specs (dropped={only_in}, added={only_out}, "
                  f"reshaped={diff})",
                  "the engine feeds state back verbatim every step")
+
+    # ---- quantised cache formats (PR 10) ---------------------------------
+    # re-verify the same declarations with a quantised kv_format: the cache
+    # geometry must grow uint8 code + float32 scale entries per group, the
+    # decode-state tree must carry them identically, and decode_step must
+    # trace (and fix-point) against the quantised state.
+    if fam.cache_spec is not None and fam.supports_ragged:
+        qfmt = "q4" if cfg.hd % 2 == 0 else "q8"
+        qcfg = cfg.replace(kv_format=qfmt)
+        qcs = fam.cache_spec(qcfg, batch, kv_len, slack, True)
+        qspecs = qcs.state_specs()
+        for g in qcs.groups:
+            if not g.quantised:
+                fail(f"cache_spec ignores cfg.kv_format={qfmt!r}: group "
+                     f"{g.index} stayed {g.fmt!r}",
+                     "pass formats=cfg.kv_format to build_cache_spec")
+                continue
+            code, scale = qspecs[g.k_key], qspecs[g.k_scale_key]
+            if code.dtype != "uint8":
+                fail(f"quantised group {g.index}: codes declared "
+                     f"{code.dtype}, expected uint8")
+            if scale.dtype != "float32" or tuple(scale.shape)[-1] != 1:
+                fail(f"quantised group {g.index}: scales declared "
+                     f"{scale.shape}/{scale.dtype}, expected per-(token, "
+                     "head) float32 with trailing dim 1")
+        qdss = fam.decode_state_specs(qcfg, batch, kv_len, slack, True)
+        for key in qcs.state_keys:
+            if key not in qdss:
+                fail(f"quantised cache key {key!r} missing from "
+                     f"decode_state_specs under kv_format={qfmt!r}",
+                     "codes + scales must ride the state tree")
+                continue
+            want, got = qspecs[key], qdss[key]
+            if tuple(want.shape) != tuple(got.shape) \
+                    or want.dtype != got.dtype:
+                fail(f"quantised state key {key!r}: cache_spec declares "
+                     f"{want.shape}/{want.dtype} but decode_state_specs "
+                     f"declares {got.shape}/{got.dtype}")
+        qstate_sds = specs_to_sds(qdss)
+        qb = {"tokens": jax.ShapeDtypeStruct((batch, chunk), i32),
+              "t_valid": jax.ShapeDtypeStruct((batch,), i32),
+              "reset": jax.ShapeDtypeStruct((batch,), jnp.dtype(bool))}
+        try:
+            _, qnew = jax.eval_shape(
+                lambda p, s, bb: fam.decode_step(p, s, bb, qcfg),
+                params_sds, qstate_sds, qb)
+        except Exception as e:  # noqa: BLE001 — report, never crash
+            fail(f"decode_step rejects the ragged chunk under "
+                 f"kv_format={qfmt!r}: {type(e).__name__}: {e}",
+                 "the quantised cache must serve through the same step")
+        else:
+            q_in = {k: (tuple(v.shape), str(v.dtype))
+                    for k, v in qstate_sds.items()}
+            q_out = {k: (tuple(v.shape), str(v.dtype))
+                     for k, v in qnew.items()} \
+                if isinstance(qnew, dict) else None
+            if q_out != q_in:
+                fail(f"decode_step under kv_format={qfmt!r}: state is not "
+                     "a fixed point of the quantised specs",
+                     "codes/scales entries must round-trip the step")
     return ContractReport(tag, fam.name, tuple(findings))
 
 

@@ -60,6 +60,54 @@ def allocate_bits(
     return {t: float(bi) for t, bi in zip(names, b)}
 
 
+def kv_format_bytes(fmt: str, head_dim: int) -> float:
+    """Resident bytes per dense cache element for a KV storage format,
+    including the per-(token, head) f32 block scale amortised over the
+    head dim (``serve.cache`` geometry: one scale per head_dim row)."""
+    if fmt == "f32":
+        return 4.0
+    bits = {"q8": 8, "q4": 4}[fmt]
+    return bits / 8.0 + 4.0 / head_dim
+
+
+def allocate_kv_formats(
+    stats: Dict[str, dict],
+    budget_bytes: float,
+    head_dim: int,
+) -> Dict[str, str]:
+    """Per-cache-group KV storage format under a resident cache-byte
+    budget — the Eq. 5 machinery applied to the decode cache: each group's
+    sensitivity is its b0-independent Fisher term (log2 RMS + ½ log2 f̄,
+    :func:`raw_sensitivity` over :func:`repro.core.fisher.estimate_kv_fisher`
+    stats), and formats are demoted greedily from f32 through the
+    block-scaled ladder (f32 → q8 → q4) **least-sensitive group first**
+    until the budget is met — the discrete-format analogue of lowering b0.
+
+    ``stats``: ``{group: {"numel", "rms", "fisher_mean"}}`` with ``numel``
+    the group's dense f32 cache element count. Raises ``ValueError`` when
+    even all-q4 exceeds the budget (the geometry, not the format, is then
+    the problem)."""
+    raw = raw_sensitivity(stats)
+    fmt = {g: "f32" for g in stats}
+
+    def total() -> float:
+        return sum(stats[g]["numel"] * kv_format_bytes(fmt[g], head_dim)
+                   for g in stats)
+
+    order = sorted(stats, key=lambda g: raw[g])   # least sensitive first
+    for down in ("q8", "q4"):
+        for g in order:
+            if total() <= budget_bytes:
+                return fmt
+            fmt[g] = down
+    if total() > budget_bytes:
+        raise ValueError(
+            f"allocate_kv_formats: all-q4 cache needs {total():.0f} B, over "
+            f"the {budget_bytes:.0f} B budget — shrink kv_len/batch or "
+            "raise the budget")
+    return fmt
+
+
 def heuristic_bits(
     stats: Dict[str, dict],
     target_bits: float,

@@ -110,6 +110,76 @@ def estimate_diag_fisher(
                         fisher)
 
 
+def estimate_kv_fisher(cfg, params, *, batch_size: int = 2, kv_len: int = 32,
+                       warm_steps: int = 8, samples: int = 4, rng=None):
+    """Diagonal-Fisher sensitivity of the decode-time KV cache, per cache
+    group — the Eq. 8 estimator with the *cache rows* in place of the
+    weights: ŷ is sampled from the model's own next-token distribution and
+    the squared gradient of -log p(ŷ) w.r.t. each group's K/V rows is
+    accumulated over ``samples`` label draws.
+
+    Runs a short dense greedy decode (``cfg.kv_format`` forced off — the
+    sensitivity of the *values*, not of any quantised encoding) to populate
+    ``warm_steps`` rows per slot, then differentiates one further decode
+    step. Returns ``{group_name: {"numel", "rms", "fisher_mean"}}`` keyed
+    ``g{i}`` in cache-group order, with ``numel`` the group's dense f32
+    cache element count (K and V) at this geometry — the unit
+    :func:`repro.core.allocation.allocate_kv_formats` budgets in."""
+    from repro.models.api import get_family
+    cfg = cfg.replace(kv_format="")
+    fam = get_family(cfg.family)
+    spec = fam.cache_spec(cfg, batch_size, kv_len, slack=1)
+    specs = fam.decode_state_specs(cfg, batch_size, kv_len, slack=1)
+    state = {k: jnp.zeros(s.shape, s.dtype) for k, s in specs.items()}
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    step = jax.jit(lambda s, b: fam.decode_step(params, s, b, cfg))
+    tok = jnp.ones((batch_size, 1), jnp.int32)
+    for _ in range(warm_steps):
+        logits, state = step(state, {"tokens": tok})
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+
+    cache_keys = []
+    for g in spec.groups:
+        cache_keys += [f"k{g.index}", f"v{g.index}"]
+
+    def loss(cache_sub, r):
+        st = dict(state, **cache_sub)
+        logits, _ = fam.decode_step(params, st, {"tokens": tok}, cfg)
+        row = logits[:, -1].astype(jnp.float32)
+        y = jax.random.categorical(r, row, axis=-1)
+        logp = jax.nn.log_softmax(row, axis=-1)
+        return -jnp.sum(jnp.take_along_axis(logp, y[:, None], 1))
+
+    cache = {k: state[k] for k in cache_keys}
+    grad_fn = jax.jit(jax.grad(loss))
+    sq = {k: np.zeros(cache[k].shape, np.float64) for k in cache_keys}
+    for _ in range(samples):
+        rng, sub = jax.random.split(rng)
+        g = grad_fn(cache, sub)
+        for k in cache_keys:
+            sq[k] += np.square(np.asarray(g[k], np.float64))
+    # written rows only: every slot decoded warm_steps tokens, so rows
+    # [0, warm_steps) of the seq_kv axis (axis 2) hold real K/V values —
+    # averaging over the untouched zero tail would dilute both summaries
+    written = min(warm_steps, min(g.length for g in spec.groups))
+    stats = {}
+    for g in spec.groups:
+        rows = [np.asarray(state[k], np.float64)[:, :, :written]
+                for k in (f"k{g.index}", f"v{g.index}")]
+        fish = [sq[k][:, :, :written] / samples
+                for k in (f"k{g.index}", f"v{g.index}")]
+        stats[f"g{g.index}"] = dict(
+            numel=int(sum(np.prod(state[k].shape)
+                          for k in (f"k{g.index}", f"v{g.index}"))),
+            rms=float(np.sqrt(np.mean(np.concatenate(
+                [r.ravel() for r in rows]) ** 2) + 1e-30)),
+            fisher_mean=float(np.mean(np.concatenate(
+                [f.ravel() for f in fish]))),
+        )
+    return stats
+
+
 def per_tensor_stats(params, fisher):
     """Summaries used by the bit-allocation scheme: (numel, rms, mean Fisher)
     per tensor."""

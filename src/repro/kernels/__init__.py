@@ -1,7 +1,11 @@
 """repro.kernels — Pallas TPU kernels for the paper's compute hot-spots.
 
-  block_quant     fused block-absmax quantise (codes + scales in one pass)
-  dequant_matmul  fused dequantise @ x — the memory-bound serving matmul
+  block_quant       fused block-absmax quantise (codes + scales in one pass)
+  dequant_matmul    fused dequantise @ x — the memory-bound serving matmul
+  decode_attention  fused quantised-KV flash-decode attention: block-scaled
+                    q8/q4 cache codes dequantise in VMEM after the HBM read,
+                    inside an online-softmax sweep with the serving path's
+                    ring/window/causal mask semantics
 
 Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper
 with CPU fallback), ref.py (pure-jnp oracle). Validated in interpret=True on

@@ -1,0 +1,5 @@
+"""Fused quantised-KV flash-decode attention (Pallas + jnp oracle)."""
+from .decode_attention import (choose_schunk,  # noqa: F401
+                               decode_attention_quant)
+from .ref import (decode_attention_quant_ref, dequant_kv_ref,  # noqa: F401
+                  unpack_nibbles_hd)

@@ -1,0 +1,171 @@
+"""Pallas TPU kernel: flash-style decode attention over a quantised KV cache.
+
+The decode hot path reads the whole KV cache every token — at serving
+batch sizes it is HBM-bound, so the win is shrinking the stream: K/V live
+in HBM as block-scaled uint8 codes (nibble-packed for 4-bit) plus one
+float32 absmax scale per (token, head) row, and this kernel dequantises
+them **in VMEM** after the HBM read — codes stream at 1/4–1/8 the dense
+f32 bytes and no dense copy of the cache ever exists.
+
+Shape/grid design (one cache group, one layer per call):
+
+* grid ``(B, S // sc)`` — batch rows outer, cache chunks inner (the minor
+  grid dim is sequential on TPU, so VMEM scratch carries the online-softmax
+  state ``(m, l, acc)`` across a row's chunk sweep, exactly the
+  ``flash_attention`` recurrence).
+* per step: load a ``(sc, K, hdc)`` code tile + ``(sc, K, 1)`` scales,
+  dequantise (codebook gather × scale; nibble unpack first for 4-bit),
+  compute masked scores against the ``(T, H, hd)`` query block, and fold
+  into the carry. The last chunk writes ``acc / l``.
+* masks are built **in-kernel** from reconstructed slot positions — the
+  ring/window/causal semantics of ``models.layers.chunked_decode_attention``
+  (slot ``s`` holds position ``last - ((last - s) % S)`` for ring buffers;
+  negative ⇒ never written), so wrap-around needs no extra inputs.
+
+The S-chunk tile rides the existing dequant tuning machinery
+(``kernels.dequant_matmul.tune``): the decode-attention geometry maps onto
+``choose_tiles(M=T·H, K=hd, N=S, bits, n_codes=2**bits, block=hd)`` — the
+streamed dim is the cache length, the contraction is the head dim, and the
+chosen ``tn`` is the chunk; ``tune.register`` pre-seeds measured overrides
+per geometry exactly as for the matmul kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dequant(codes, scales, cb, bits: int):
+    """In-VMEM dequant of a (sc, K, hdc) code tile: nibble unpack (4-bit),
+    codebook gather, per-row scale FMA. Returns (sc, K, hd) float32."""
+    if bits == 4:
+        lo = codes & jnp.uint8(0xF)
+        hi = (codes >> jnp.uint8(4)) & jnp.uint8(0xF)
+        pair = jnp.concatenate([lo[..., None], hi[..., None]], axis=-1)
+        codes = pair.reshape(*codes.shape[:-1], 2 * codes.shape[-1])
+    vals = cb[codes.astype(jnp.int32)]
+    return vals * scales.astype(jnp.float32)
+
+
+def _kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, cb_ref, qp_ref, w_ref,
+            o_ref, m_ref, l_ref, acc_ref, *, bits: int, sc: int, S: int,
+            ring: bool, T: int, K: int, G: int, hd: int):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cb = cb_ref[...]
+    qg = q_ref[0].astype(jnp.float32).reshape(T, K, G, hd)
+    k = _dequant(kc_ref[0], ks_ref[0], cb, bits)          # (sc, K, hd)
+    v = _dequant(vc_ref[0], vs_ref[0], cb, bits)
+    s = jnp.einsum("tkgh,skh->tkgs", qg, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+
+    qpos = qp_ref[0]                                      # (T,) int32
+    window = w_ref[0, 0]
+    slots = j * sc + jax.lax.broadcasted_iota(jnp.int32, (1, sc), 1)[0]
+    if ring:
+        last = qpos[T - 1]
+        kv = last - ((last - slots) % S)
+        mask = kv[None, :] <= qpos[:, None]               # causal
+        mask &= qpos[:, None] - kv[None, :] < window
+        mask &= kv[None, :] >= 0                          # never written
+    else:
+        kv = slots
+        mask = kv[None, :] <= qpos[:, None]
+        mask &= jnp.where(window > 0,
+                          qpos[:, None] - kv[None, :] < window, True)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)     # (T, K, G, sc)
+
+    m_prev = m_ref[...].reshape(T, K, G)
+    l_prev = l_ref[...].reshape(T, K, G)
+    acc_prev = acc_ref[...].reshape(T, K, G, hd)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("tkgs,skh->tkgh", p, v,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc_prev * corr[..., None] + pv
+    m_ref[...] = m_new.reshape(T, K * G)
+    l_ref[...] = l_new.reshape(T, K * G)
+    acc_ref[...] = acc_new.reshape(T * K * G, hd)
+
+    @pl.when(j == nj - 1)
+    def _done():
+        l = acc_ref[...].reshape(T, K, G, hd) / jnp.maximum(
+            l_ref[...].reshape(T, K, G)[..., None], 1e-30)
+        o_ref[0] = l.reshape(T, K * G, hd).astype(o_ref.dtype)
+
+
+def choose_schunk(S: int, T: int, H: int, hd: int, bits: int) -> int:
+    """Cache-chunk tile via the shared dequant tuning table: the streamed
+    dim (N) is the cache length, the contraction (K) the head dim, and the
+    scale block is one head row. Overridable per geometry through
+    ``tune.register`` like every dequant matmul shape."""
+    from repro.kernels.dequant_matmul import tune
+    tc = tune.choose_tiles(M=T * H, K=hd, N=S, bits=bits,
+                           n_codes=2 ** bits, block=hd)
+    return tc.tn if (0 < tc.tn <= S and S % tc.tn == 0) else S
+
+
+@functools.partial(jax.jit, static_argnames=("ring", "bits", "interpret",
+                                             "schunk"))
+def decode_attention_quant(q, k_codes, k_scales, v_codes, v_scales,
+                           codebook, q_positions, window=0, *,
+                           ring: bool = False, bits: int = 8,
+                           interpret: bool = False, schunk=None):
+    """Masked decode attention straight from quantised cache rows.
+
+    q (B, T, H, hd); codes (B, S, K, hdc) uint8 (hdc = hd, or hd//2 nibble-
+    packed for bits=4); scales (B, S, K, 1) f32; q_positions (B, T) int32;
+    ``window`` may be a traced scalar (0 = global). Returns (B, T, H, hd)
+    in q.dtype — the quantised twin of
+    ``models.layers.chunked_decode_attention``."""
+    B, T, H, hd = q.shape
+    S, K = k_codes.shape[1], k_codes.shape[2]
+    G = H // K
+    hdc = hd // 2 if bits == 4 else hd
+    assert k_codes.shape == (B, S, K, hdc), (k_codes.shape, (B, S, K, hdc))
+    assert k_scales.shape == (B, S, K, 1), k_scales.shape
+    sc = schunk or choose_schunk(S, T, H, hd, bits)
+    assert S % sc == 0, (S, sc)
+    w_arr = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (1, 1))
+    qp = q_positions.astype(jnp.int32)
+    cb = codebook.astype(jnp.float32)
+    grid = (B, S // sc)
+    kernel = functools.partial(_kernel, bits=bits, sc=sc, S=S, ring=ring,
+                               T=T, K=K, G=G, hd=hd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, H, hd), lambda b, j: (b, 0, 0, 0)),
+            pl.BlockSpec((1, sc, K, hdc), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, sc, K, 1), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, sc, K, hdc), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, sc, K, 1), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((cb.shape[0],), lambda b, j: (0,)),
+            pl.BlockSpec((1, T), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, H, hd), lambda b, j: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((T, K * G), jnp.float32),
+            pltpu.VMEM((T, K * G), jnp.float32),
+            pltpu.VMEM((T * K * G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_codes, k_scales, v_codes, v_scales, cb, qp, w_arr)

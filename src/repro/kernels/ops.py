@@ -8,6 +8,10 @@ import jax.numpy as jnp
 
 from .block_quant.block_quant import block_quant as _bq_pallas
 from .block_quant.ref import block_quant_ref, block_dequant_ref
+from .decode_attention.decode_attention import \
+    decode_attention_quant as _daq_pallas
+from .decode_attention.ref import (decode_attention_quant_ref,
+                                   dequant_kv_ref)
 from .dequant_matmul.dequant_matmul import TILE_M as MATMUL_TILE_M
 from .dequant_matmul.dequant_matmul import dequant_matmul as _dqm_pallas
 from .dequant_matmul.dequant_matmul import dequant_matmul_t as _dqmt_pallas
@@ -100,6 +104,43 @@ def dequant_matmul_t_interpret(x, codes, scales, codebook, block: int = 128,
                                bits: int = 8, variant: str | None = None):
     return _dqmt_pallas(x, codes, scales, codebook, block=block, bits=bits,
                         interpret=True, variant=variant)
+
+
+def decode_attention_quant(q, k_codes, k_scales, v_codes, v_scales,
+                           codebook, q_positions, window=0, *,
+                           ring: bool = False, bits: int = 8,
+                           interpret: bool | None = None):
+    """Masked decode attention straight from block-scaled KV codes — the
+    quantised twin of ``models.layers.chunked_decode_attention``. Fused
+    flash-decode Pallas kernel on TPU (codes dequantise in VMEM after the
+    HBM read); compositional oracle (dequantise + the dense masked path)
+    off-TPU. ``bits=4``: codes nibble-packed pairwise along the head
+    dim."""
+    if interpret is None:
+        interpret = not on_tpu()
+    if interpret and not on_tpu():
+        return decode_attention_quant_ref(
+            q, k_codes, k_scales, v_codes, v_scales, codebook, q_positions,
+            window=window, ring=ring, bits=bits)
+    return _daq_pallas(q, k_codes, k_scales, v_codes, v_scales, codebook,
+                       q_positions, window, ring=ring, bits=bits,
+                       interpret=interpret)
+
+
+def decode_attention_quant_interpret(q, k_codes, k_scales, v_codes, v_scales,
+                                     codebook, q_positions, window=0, *,
+                                     ring: bool = False, bits: int = 8,
+                                     schunk=None):
+    """Force the Pallas kernel body in interpret mode (tests)."""
+    return _daq_pallas(q, k_codes, k_scales, v_codes, v_scales, codebook,
+                       q_positions, window, ring=ring, bits=bits,
+                       interpret=True, schunk=schunk)
+
+
+def dequant_kv(codes, scales, codebook, bits: int = 8, dtype=jnp.float32):
+    """Dequantise block-scaled KV rows (codes (..., hdc) + per-row scales
+    (..., 1) → values (..., hd)); see decode_attention.ref."""
+    return dequant_kv_ref(codes, scales, codebook, bits, dtype)
 
 
 def dequant_rows(codes, scales, codebook, block: int = 128, dtype=None,

@@ -60,6 +60,19 @@ def main(argv=None):
                     help="disable the rolling-window ring allocation for "
                          "local-attention layer groups and serve from the "
                          "masked full-length baseline layout")
+    ap.add_argument("--kv-format", default=None,
+                    choices=["f32", "q8", "q4", "auto"],
+                    help="KV-cache storage format: f32 (dense, the default "
+                         "and bit-exact kill-switch), q8/q4 (block-scaled "
+                         "codes + per-(token,head) f32 scales, dequantised "
+                         "in VMEM by the fused flash-decode kernel), or "
+                         "auto (per-group Fisher allocation under "
+                         "--kv-budget-bytes)")
+    ap.add_argument("--kv-budget-bytes", type=int, default=None,
+                    help="with --kv-format auto: resident KV cache byte "
+                         "budget the Fisher allocator demotes formats "
+                         "(f32 -> q8 -> q4, least-sensitive group first) "
+                         "to meet")
     ap.add_argument("--no-validate", action="store_true",
                     help="with --packed: skip the load-time integrity pass "
                          "over the packed checkpoint (trusted-checkpoint "
@@ -108,6 +121,11 @@ def main(argv=None):
         params = jax.tree.map(jax.numpy.asarray, params)
     else:
         params = fam.init(jax.random.PRNGKey(0), cfg)
+
+    if args.kv_format == "auto":
+        cfg = cfg.replace(kv_format=_auto_kv_format(cfg, fam, params, args))
+    elif args.kv_format and args.kv_format != "f32":
+        cfg = cfg.replace(kv_format=args.kv_format)
 
     if args.quantise:
         plan = build_plan(params, args.quantise)
@@ -159,6 +177,16 @@ def main(argv=None):
               "ring buffers)")
     else:
         print(f"[serve] decode cache {cb['total']:,} bytes resident")
+    if eng.cfg.kv_format:
+        print(f"[serve] quantised KV ({eng.cfg.kv_format}): "
+              f"{cb['kv']:,} bytes ({cb['code_bytes']:,} codes + "
+              f"{cb['scale_bytes']:,} scales), "
+              f"{cb['cache_ratio_vs_dense']}x the dense "
+              f"{cb['dense_kv']:,}")
+        for i, g in enumerate(cb["cache_groups"]):
+            print(f"[serve]   group {i} [{g['format']}] "
+                  f"{g['n_layers']} layer(s) x {g['length']} slots: "
+                  f"{g['bytes']:,} bytes ({g['ratio_vs_dense']}x dense)")
     if args.traffic_replay is not None:
         return _traffic_replay(eng, args)
     rng = np.random.default_rng(0)
@@ -181,6 +209,40 @@ def main(argv=None):
         print(f"  rid={g.rid} tokens={g.tokens}"
               + (f" FAILED: {g.fail_reason}" if g.failed else ""))
     return done
+
+
+def _auto_kv_format(cfg, fam, params, args) -> str:
+    """--kv-format auto: estimate per-cache-group Fisher sensitivity on a
+    short dense decode, then demote formats (f32 -> q8 -> q4, least
+    sensitive first) until the serving-geometry cache fits
+    --kv-budget-bytes. Returns the explicit comma-separated format list
+    the config carries from here on."""
+    from repro.core.allocation import allocate_kv_formats, kv_format_bytes
+    from repro.core.fisher import estimate_kv_fisher
+    if args.kv_budget_bytes is None:
+        raise SystemExit("[serve] --kv-format auto needs --kv-budget-bytes")
+    if fam.cache_spec is None:
+        raise SystemExit(f"[serve] --kv-format auto: family {cfg.family!r} "
+                         "declares no cache geometry")
+    stats = estimate_kv_fisher(cfg, params, batch_size=2,
+                               kv_len=min(args.kv_len, 32))
+    # rescale calibration numels to the serving geometry (same groups,
+    # serving batch/kv_len): budget what will actually be resident
+    spec = fam.cache_spec(cfg, args.slots, args.kv_len,
+                          slack=args.prefill_chunk,
+                          windowed=not args.uniform_cache)
+    for g in spec.groups:
+        stats[f"g{g.index}"]["numel"] = (
+            2 * len(g.layers) * args.slots * g.length * spec.kv_heads *
+            spec.head_dim)
+    alloc = allocate_kv_formats(stats, args.kv_budget_bytes, cfg.hd)
+    fmts = [alloc[f"g{g.index}"] for g in spec.groups]
+    total = sum(stats[f"g{g.index}"]["numel"] *
+                kv_format_bytes(alloc[f"g{g.index}"], cfg.hd)
+                for g in spec.groups)
+    print(f"[serve] kv auto allocation under {args.kv_budget_bytes:,} B: "
+          f"{','.join(fmts)} (~{total:,.0f} B resident KV)")
+    return ",".join(fmts)
 
 
 def _traffic_replay(eng, args):

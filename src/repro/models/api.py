@@ -79,6 +79,11 @@ class ModelConfig:
     param_dtype: str = "float32"  # master dtype
     kv_dtype: str = ""            # KV-cache storage dtype ("" = dtype);
                                   # "float8_e4m3fn" halves decode cache
+    kv_format: str = ""           # quantised KV-cache storage per cache
+                                  # group ("" = dense/bit-exact; "q8"/"q4"
+                                  # broadcast; comma list per group index;
+                                  # "auto" is resolved by the launcher via
+                                  # Fisher allocation before cfg is built)
     attn_chunk: int = 1024        # flash-attention KV chunk
     linear_chunk: int = 32        # WKV/SSD block-parallel chunk (0 = scan)
     remat: str = "full"           # none | full | dots
@@ -250,13 +255,17 @@ def ragged_prologue(state, batch, reset_axes):
     return pos, adv, valid, entries
 
 
-def ring_prologue(state, batch, n_groups: int, extra_reset=None):
+def ring_prologue(state, batch, n_groups: int, extra_reset=None,
+                  formats=None):
     """The grouped-cache variant of :func:`ragged_prologue` — the shared
     prologue of the ring decode-cache protocol. The reset set is derived
     from the cache groups: every group's stacked ``k{g}``/``v{g}`` cache
     wipes at batch axis 1 (the grouped layout is always (Lg, B, S, ...)),
-    plus any family extras (``extra_reset``, e.g. zamba2's conv/ssm at
-    axis 2 or rwkv6-style recurrent entries).
+    plus the per-row ``k{g}s``/``v{g}s`` scale stacks for quantised
+    groups (``formats``: one KV format per group, default all dense — a
+    zeroed scale dequantises every code in the row to exactly 0.0), plus
+    any family extras (``extra_reset``, e.g. zamba2's conv/ssm at axis 2
+    or rwkv6-style recurrent entries).
 
     Wiping a ring group on reset is defence in depth rather than a
     correctness requirement: the wrap-correct masks are built from
@@ -265,11 +274,14 @@ def ring_prologue(state, batch, n_groups: int, extra_reset=None):
     leaks impossible even if a mask regresses. Returns the same
     ``(pos, adv, valid, entries)`` as :func:`ragged_prologue`, with
     ``entries`` holding the possibly-wiped cache stacks under their
-    ``k{g}``/``v{g}`` keys."""
+    ``k{g}``/``v{g}`` (+ scale) keys."""
     axes = {}
     for g in range(n_groups):
         axes[f"k{g}"] = 1
         axes[f"v{g}"] = 1
+        if formats is not None and formats[g] != "f32":
+            axes[f"k{g}s"] = 1
+            axes[f"v{g}s"] = 1
     if extra_reset:
         axes.update(extra_reset)
     return ragged_prologue(state, batch, axes)

@@ -209,6 +209,66 @@ def rope(x, positions, theta: float):
 
 
 # ---------------------------------------------------------------------------
+# Quantised KV cache (block-scaled codes + per-row scales)
+# ---------------------------------------------------------------------------
+#
+# A quantised cache group stores K/V as uint8 codebook codes (nibble-packed
+# pairwise along the head dim for 4-bit) plus one float32 absmax scale per
+# (token, head) row — the paper's block-scaled format with the scale block
+# set to head_dim. `QuantisedKV` is a plain pytree, so the pair rides layer
+# scans, `lax.switch` branches and the engine's state dict exactly like a
+# dense cache array; the cache-side functions below dispatch on it, keeping
+# one code path per model family with the dense path untouched (the
+# `quantised_cache=False` kill-switch is bit-exact because it *is* the old
+# code).
+
+class QuantisedKV(NamedTuple):
+    """One cache stack's quantised storage: codes (..., S, K, hdc) uint8 +
+    scales (..., S, K, 1) float32 (hdc = hd, or hd // 2 nibble-packed)."""
+    codes: jnp.ndarray
+    scales: jnp.ndarray
+
+
+def codebook_bits(codebook) -> int:
+    """Code width implied by a KV codebook (16 codes → 4-bit nibble-packed,
+    256 → 8-bit). Static: codebook shapes are trace-time constants."""
+    n = codebook.shape[0]
+    if n == 16:
+        return 4
+    if n == 256:
+        return 8
+    raise ValueError(f"KV codebook must have 16 or 256 codes, got {n}")
+
+
+def quantise_kv(new, codebook, bits: int):
+    """Quantise fresh K or V rows (B, T, K, hd) through the block_quant
+    machinery (absmax per (token, head) row → bf16 round-away scale →
+    round-to-nearest codebook index). Returns (codes (B, T, K, hdc) uint8,
+    scales (B, T, K, 1) f32); 4-bit codes nibble-pack pairwise along hd
+    (byte j = element 2j low | element 2j+1 high), so each row is
+    self-contained and ring writes never read-modify-write."""
+    B, T, K, hd = new.shape
+    rows = B * T * K
+    x = new.astype(jnp.float32).reshape(rows, hd)
+    pad = (-rows) % 256 if rows > 256 else 0   # block_quant row-tile pad
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    codes, scales = kops.block_quant(x, codebook, block=hd)
+    codes = codes[:rows].reshape(B, T, K, hd)
+    scales = scales[:rows].reshape(B, T, K, 1)
+    if bits == 4:
+        codes = codes[..., 0::2] | (codes[..., 1::2] << jnp.uint8(4))
+    return codes, scales
+
+
+def dequant_kv(cache: QuantisedKV, codebook, dtype=jnp.float32):
+    """Densify a quantised cache stack (tests / oracle paths only — the
+    serving read path streams codes through the fused kernel instead)."""
+    return kops.dequant_kv(cache.codes, cache.scales, codebook,
+                           bits=codebook_bits(codebook), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
 # Attention
 # ---------------------------------------------------------------------------
 
@@ -293,7 +353,7 @@ def flash_attention(q, k, v, q_positions, k_positions, *, causal: bool = True,
 
 
 def decode_attention(q, k_cache, v_cache, q_position, *, window=0,
-                     kv_positions=None, ring=False):
+                     kv_positions=None, ring=False, codebook=None):
     """Single-token attention against a KV cache (no chunking needed: the
     score tensor is (B, H, S) which is small for decode).
 
@@ -302,7 +362,19 @@ def decode_attention(q, k_cache, v_cache, q_position, *, window=0,
     positions are reconstructed from ``q_position`` (the highest written
     position) instead of being the slot index; negative reconstructions
     (never-written slots) are masked.
+
+    :class:`QuantisedKV` caches (with their ``codebook``) route through the
+    fused quantised flash-decode kernel — codes stream from HBM and
+    dequantise in VMEM, never materialising a dense cache.
     """
+    if isinstance(k_cache, QuantisedKV):
+        assert kv_positions is None, \
+            "quantised caches reconstruct slot positions in-kernel"
+        qpos = jnp.broadcast_to(jnp.asarray(q_position, jnp.int32),
+                                (q.shape[0],))[:, None]
+        return kops.decode_attention_quant(
+            q, k_cache.codes, k_cache.scales, v_cache.codes, v_cache.scales,
+            codebook, qpos, window, ring=ring, bits=codebook_bits(codebook))
     B, _, H, hd = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
     G = H // K
@@ -325,13 +397,16 @@ def decode_attention(q, k_cache, v_cache, q_position, *, window=0,
 
 
 def chunked_decode_attention(q, k_cache, v_cache, q_positions, *, window=0,
-                             ring=False):
+                             ring=False, codebook=None):
     """Multi-token decode attention with **per-slot** positions: a chunk of
     T query tokens per batch row against that row's KV cache. Used for both
     single-token decode (T=1) and batched chunked prefill — slots need not
     be in lockstep.
 
-    q: (B, T, H, hd); caches: (B, S, K, hd); q_positions: (B, T) absolute
+    q: (B, T, H, hd); caches: (B, S, K, hd) — or :class:`QuantisedKV`
+    (block-scaled codes + scales, with their ``codebook``), which routes
+    through the fused quantised flash-decode kernel with identical
+    ring/window/causal mask semantics; q_positions: (B, T) absolute
     positions of the query tokens (the new tokens' k/v must already be
     written into the cache at those positions).
 
@@ -345,6 +420,11 @@ def chunked_decode_attention(q, k_cache, v_cache, q_positions, *, window=0,
     and never-written slots reconstruct negative. Requires
     ``S ≥ window + T - 1`` so ragged-chunk padding writes only clobber
     keys already outside every reachable window (see serve.cache)."""
+    if isinstance(k_cache, QuantisedKV):
+        return kops.decode_attention_quant(
+            q, k_cache.codes, k_cache.scales, v_cache.codes, v_cache.scales,
+            codebook, q_positions, window, ring=ring,
+            bits=codebook_bits(codebook))
     B, T, H, hd = q.shape
     S, K = k_cache.shape[1], k_cache.shape[2]
     G = H // K
@@ -369,12 +449,27 @@ def chunked_decode_attention(q, k_cache, v_cache, q_positions, *, window=0,
     return out.reshape(B, T, H, hd).astype(q.dtype)
 
 
-def update_kv_cache(cache, new, pos, *, ring=False):
+def update_kv_cache(cache, new, pos, *, ring=False, codebook=None):
     """Write T new entries per batch row at that row's own position.
     cache: (B, S, K, hd); new: (B, T, K, hd); pos: (B,) int32.
     ``ring=True`` writes at ``(pos + t) % S`` (rolling-window buffers;
     the scatter indices are distinct because T ≤ S always holds — ring
-    length ≥ window + chunk - 1)."""
+    length ≥ window + chunk - 1).
+
+    A :class:`QuantisedKV` cache quantises the fresh rows at write time
+    (``codebook`` required) and scatters codes + scales with the same
+    index math — writes stay inside the jitted step and each (token, head)
+    row is self-contained, so ragged/ring overwrites behave exactly like
+    the dense path."""
+    if isinstance(cache, QuantisedKV):
+        codes, scales = quantise_kv(new, codebook, codebook_bits(codebook))
+        return QuantisedKV(
+            _kv_scatter(cache.codes, codes, pos, ring),
+            _kv_scatter(cache.scales, scales, pos, ring))
+    return _kv_scatter(cache, new, pos, ring)
+
+
+def _kv_scatter(cache, new, pos, ring):
     if not ring:
         return jax.vmap(
             lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(

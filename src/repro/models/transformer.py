@@ -17,10 +17,10 @@ import numpy as np
 
 from .api import (ModelConfig, ModelFamily, ParamSpec, ring_prologue,
                   register_family)
-from .layers import (AttnParams, MlpParams, MoeParams, attn_block,
-                     chunked_decode_attention, embed_lookup, flash_attention,
-                     linear, moe_block, qkv_project, rms_norm, swiglu,
-                     update_kv_cache)
+from .layers import (AttnParams, MlpParams, MoeParams, QuantisedKV,
+                     attn_block, chunked_decode_attention, embed_lookup,
+                     flash_attention, linear, moe_block, qkv_project,
+                     rms_norm, swiglu, update_kv_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -164,12 +164,15 @@ def cache_spec(cfg: ModelConfig, batch_size: int, kv_len: int,
     grouped by their window, global groups at ``kv_len + slack``, windowed
     groups as ``min(window, kv_len) + slack`` ring buffers. ``windowed=
     False`` keeps the grouping but allocates every group at the full
-    length — the masked-full-cache baseline / ring kill-switch."""
+    length — the masked-full-cache baseline / ring kill-switch. Per-group
+    storage formats come from ``cfg.kv_format`` ("" = dense; q8/q4 store
+    block-scaled codes + per-row scales)."""
     from repro.serve.cache import build_cache_spec
     return build_cache_spec(
         cfg.window_pattern(), batch_size, kv_len, slack=slack,
         kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
-        dtype=cfg.kv_dtype or cfg.dtype, windowed=windowed)
+        dtype=cfg.kv_dtype or cfg.dtype, windowed=windowed,
+        formats=cfg.kv_format)
 
 
 def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int,
@@ -217,22 +220,43 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     the linear full-length path. Weights may be PackedTensors (serving
     from packed quantised weights) — dense weights take the identical
     einsum path as before."""
-    from repro.serve.cache import layer_groups
+    from repro.serve.cache import kv_codebook, layer_groups, parse_kv_formats
     tokens = batch["tokens"]
     B, T = tokens.shape
     dt = jnp.dtype(cfg.dtype)
     groups = layer_groups(cfg.window_pattern())
-    pos, adv, _, st = ring_prologue(state, batch, len(groups))
+    fmts = parse_kv_formats(cfg.kv_format, len(groups), cfg.hd)
+    pos, adv, _, st = ring_prologue(state, batch, len(groups), formats=fmts)
     x = embed_lookup(params["embed"], tokens, dtype=dt)
     positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
 
-    def layer_decode(x, lp, k_cache, v_cache, window, ring):
+    # quantised cache groups carry (codes, scales) as a QuantisedKV pytree;
+    # dense groups stay plain arrays — layers.update_kv_cache /
+    # chunked_decode_attention dispatch on the type, so layer_decode below
+    # is one code path (and bit-identical to the pre-quantisation step when
+    # every group is dense)
+    def group_cache(g):
+        if fmts[g] == "f32":
+            return st[f"k{g}"], st[f"v{g}"]
+        return (QuantisedKV(st[f"k{g}"], st[f"k{g}s"]),
+                QuantisedKV(st[f"v{g}"], st[f"v{g}s"]))
+
+    def cache_entries(g, kc, vc):
+        if fmts[g] == "f32":
+            return {f"k{g}": kc, f"v{g}": vc}
+        return {f"k{g}": kc.codes, f"k{g}s": kc.scales,
+                f"v{g}": vc.codes, f"v{g}s": vc.scales}
+
+    def layer_decode(x, lp, k_cache, v_cache, window, ring, codebook=None):
         h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
         q, k_new, v_new = qkv_project(h, _layer_attn_params(lp), positions, cfg)
-        k_cache = update_kv_cache(k_cache, k_new, pos, ring=ring)
-        v_cache = update_kv_cache(v_cache, v_new, pos, ring=ring)
+        k_cache = update_kv_cache(k_cache, k_new, pos, ring=ring,
+                                  codebook=codebook)
+        v_cache = update_kv_cache(v_cache, v_new, pos, ring=ring,
+                                  codebook=codebook)
         o = chunked_decode_attention(q, k_cache, v_cache, positions,
-                                     window=window, ring=ring)
+                                     window=window, ring=ring,
+                                     codebook=codebook)
         x = x + linear(o, lp["wo"], "btnh,nhd->btd")
         h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
         if cfg.n_experts:
@@ -245,18 +269,23 @@ def decode_step(params, state, batch, cfg: ModelConfig):
             y = swiglu(h, MlpParams(lp["w_gate"], lp["w_up"], lp["w_down"]))
         return x + y, k_cache, v_cache
 
+    codebooks = [None if f == "f32" else kv_codebook(f) for f in fmts]
+
     if len(groups) == 1 and groups[0][0] == 0:
-        # homogeneous all-global stack: the cache rides the scan xs
+        # homogeneous all-global stack: the cache rides the scan xs (a
+        # QuantisedKV's codes/scales leaves slice per layer like any array)
         windows = jnp.asarray(cfg.window_pattern())
+        kc0, vc0 = group_cache(0)
 
         def body(x, inputs):
             lp, kc, vc, window = inputs
-            x, kc, vc = layer_decode(x, lp, kc, vc, window, ring=False)
+            x, kc, vc = layer_decode(x, lp, kc, vc, window, ring=False,
+                                     codebook=codebooks[0])
             return x, (kc, vc)
 
         x, (k_new, v_new) = jax.lax.scan(
-            body, x, (params["layers"], st["k0"], st["v0"], windows))
-        new_caches = {"k0": k_new, "v0": v_new}
+            body, x, (params["layers"], kc0, vc0, windows))
+        new_caches = cache_entries(0, k_new, v_new)
     else:
         # heterogeneous stack: group caches ride the scan carry; layer l
         # switches into its group's stack at its group-local slot
@@ -265,24 +294,24 @@ def decode_step(params, state, batch, cfg: ModelConfig):
         for g, (_, layers) in enumerate(groups):
             for j, l in enumerate(layers):
                 gid[l], gslot[l] = g, j
-        caches = tuple((st[f"k{g}"], st[f"v{g}"])
-                       for g in range(len(groups)))
+        caches = tuple(group_cache(g) for g in range(len(groups)))
 
         def make_branch(g):
             window = groups[g][0]
 
             def branch(op):
                 x, caches, lp, slot = op
-                kc = jax.lax.dynamic_index_in_dim(caches[g][0], slot, 0,
-                                                  keepdims=False)
-                vc = jax.lax.dynamic_index_in_dim(caches[g][1], slot, 0,
-                                                  keepdims=False)
+                take = lambda a: jax.lax.dynamic_index_in_dim(
+                    a, slot, 0, keepdims=False)
+                kc = jax.tree.map(take, caches[g][0])
+                vc = jax.tree.map(take, caches[g][1])
                 x, kc, vc = layer_decode(x, lp, kc, vc, window,
-                                         ring=window > 0)
-                kg = jax.lax.dynamic_update_index_in_dim(
-                    caches[g][0], kc, slot, 0)
-                vg = jax.lax.dynamic_update_index_in_dim(
-                    caches[g][1], vc, slot, 0)
+                                         ring=window > 0,
+                                         codebook=codebooks[g])
+                put = lambda full, part: jax.lax.dynamic_update_index_in_dim(
+                    full, part, slot, 0)
+                kg = jax.tree.map(put, caches[g][0], kc)
+                vg = jax.tree.map(put, caches[g][1], vc)
                 return x, tuple((kg, vg) if i == g else c
                                 for i, c in enumerate(caches))
             return branch
@@ -300,7 +329,7 @@ def decode_step(params, state, batch, cfg: ModelConfig):
             (params["layers"], jnp.asarray(gid), jnp.asarray(gslot)))
         new_caches = {}
         for g, (kg, vg) in enumerate(caches):
-            new_caches[f"k{g}"], new_caches[f"v{g}"] = kg, vg
+            new_caches.update(cache_entries(g, kg, vg))
 
     new_state = {**new_caches, "pos": pos + adv}
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)

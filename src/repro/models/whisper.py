@@ -14,9 +14,9 @@ import jax.numpy as jnp
 
 from .api import (ModelConfig, ModelFamily, ParamSpec, ring_prologue,
                   register_family)
-from .layers import (AttnParams, chunked_decode_attention, embed_lookup,
-                     flash_attention, gelu_mlp, linear, qkv_project,
-                     update_kv_cache)
+from .layers import (AttnParams, QuantisedKV, chunked_decode_attention,
+                     embed_lookup, flash_attention, gelu_mlp, linear,
+                     qkv_project, update_kv_cache)
 
 
 def layer_norm(x, gain, eps: float = 1e-5):
@@ -143,14 +143,16 @@ def cache_spec(cfg: ModelConfig, batch_size: int, kv_len: int,
     spec machinery (no bespoke layout): whisper's decoder is pure global
     attention, so this is one full-length group over the Ld layers (MHA —
     the head axis is ``heads``, not ``kv_heads``). The cross-attention KV
-    is admission-owned state, not part of the cache geometry."""
+    is admission-owned state, not part of the cache geometry (and stays
+    dense regardless of ``cfg.kv_format``, which only governs the
+    decode-time self-attention group)."""
     import numpy as np
     from repro.serve.cache import build_cache_spec
     return build_cache_spec(
         np.zeros(cfg.n_layers, np.int32), batch_size, kv_len, slack=slack,
         kv_heads=cfg.n_heads, head_dim=cfg.hd,
         dtype=cfg.kv_dtype or cfg.dtype, windowed=windowed,
-        head_axis="heads")
+        head_axis="heads", formats=cfg.kv_format)
 
 
 def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int,
@@ -180,12 +182,20 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     cross-attention KV (``xk``/``xv``) is owned by ``cross_prefill``,
     which overwrites the slot at admission — reset leaves it alone so a
     just-prefilled slot is not clobbered."""
+    from repro.serve.cache import kv_codebook, parse_kv_formats
     tokens = batch["tokens"]  # (B, T)
     B, T = tokens.shape
     dt = jnp.dtype(cfg.dtype)
+    fmts = parse_kv_formats(cfg.kv_format, 1, cfg.hd)
     # cross KV (xk/xv) is deliberately NOT in the reset set — see docstring
-    pos, adv, _, st = ring_prologue(state, batch, 1)
-    k_s, v_s = st["k0"], st["v0"]
+    pos, adv, _, st = ring_prologue(state, batch, 1, formats=fmts)
+    if fmts[0] == "f32":
+        cb = None
+        k_s, v_s = st["k0"], st["v0"]
+    else:
+        cb = kv_codebook(fmts[0])
+        k_s = QuantisedKV(st["k0"], st["k0s"])
+        v_s = QuantisedKV(st["v0"], st["v0s"])
     x = embed_lookup(params["embed"], tokens, dtype=dt)
     positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
     # the whole encoder output is visible to every decoder position
@@ -197,9 +207,9 @@ def decode_step(params, state, batch, cfg: ModelConfig):
                         lp["self_wo"])
         h = layer_norm(x, lp["self_norm"], cfg.norm_eps)
         q, k_new, v_new = qkv_project(h, ap, positions, cfg, rope_on=True)
-        kc = update_kv_cache(kc, k_new, pos)
-        vc = update_kv_cache(vc, v_new, pos)
-        o = chunked_decode_attention(q, kc, vc, positions)
+        kc = update_kv_cache(kc, k_new, pos, codebook=cb)
+        vc = update_kv_cache(vc, v_new, pos, codebook=cb)
+        o = chunked_decode_attention(q, kc, vc, positions, codebook=cb)
         x = x + linear(o, ap.wo, "btnh,nhd->btd")
         cp = AttnParams(lp["cross_wq"], lp["cross_wk"], lp["cross_wv"],
                         lp["cross_wo"])
@@ -215,7 +225,11 @@ def decode_step(params, state, batch, cfg: ModelConfig):
                                        state["xk"], state["xv"]))
     x = layer_norm(x, params["dec_norm"], cfg.norm_eps)
     logits = linear(x, params["embed"], "btd,vd->btv")  # tied, transposed
-    new_state = dict(state, k0=k, v0=v, pos=pos + adv)
+    if cb is None:
+        new_state = dict(state, k0=k, v0=v, pos=pos + adv)
+    else:
+        new_state = dict(state, k0=k.codes, k0s=k.scales, v0=v.codes,
+                         v0s=v.scales, pos=pos + adv)
     return logits.astype(jnp.float32), new_state
 
 

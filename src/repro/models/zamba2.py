@@ -15,9 +15,9 @@ import numpy as np
 
 from .api import (ModelConfig, ModelFamily, ParamSpec, ring_prologue,
                   register_family)
-from .layers import (AttnParams, MlpParams, attn_block, causal_conv1d,
-                     chunked_decode_attention, embed_lookup, linear,
-                     qkv_project, rms_norm, swiglu, update_kv_cache)
+from .layers import (AttnParams, MlpParams, QuantisedKV, attn_block,
+                     causal_conv1d, chunked_decode_attention, embed_lookup,
+                     linear, qkv_project, rms_norm, swiglu, update_kv_cache)
 
 SSM_HEAD_DIM = 64
 
@@ -256,7 +256,7 @@ def cache_spec(cfg: ModelConfig, batch_size: int, kv_len: int,
         np.zeros(G, np.int32), batch_size, kv_len, slack=slack,
         kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
         dtype=cfg.kv_dtype or cfg.dtype, windowed=windowed,
-        layer_axis="groups")
+        layer_axis="groups", formats=cfg.kv_format)
 
 
 def decode_state_specs(cfg: ModelConfig, batch_size: int, kv_len: int,
@@ -284,12 +284,21 @@ def decode_step(params, state, batch, cfg: ModelConfig):
     per-slot KV position advance by exactly ``t_valid[b]``, with padding
     masked out of the state updates. ``reset`` zeroes a slot's conv/ssm
     state and shared-attention KV rows inside the step (slot reuse)."""
+    from repro.serve.cache import kv_codebook, parse_kv_formats
     tokens = batch["tokens"]  # (B, T)
     B, T = tokens.shape
     dt_ = jnp.dtype(cfg.dtype)
+    fmts = parse_kv_formats(cfg.kv_format, 1, cfg.hd)
     pos, adv, valid, st = ring_prologue(
-        state, batch, 1, extra_reset={"conv": 2, "ssm": 2})
-    conv_s, ssm_s, k_s, v_s = st["conv"], st["ssm"], st["k0"], st["v0"]
+        state, batch, 1, extra_reset={"conv": 2, "ssm": 2}, formats=fmts)
+    conv_s, ssm_s = st["conv"], st["ssm"]
+    if fmts[0] == "f32":
+        cb = None
+        k_s, v_s = st["k0"], st["v0"]
+    else:
+        cb = kv_codebook(fmts[0])
+        k_s = QuantisedKV(st["k0"], st["k0s"])
+        v_s = QuantisedKV(st["v0"], st["v0s"])
     x = embed_lookup(params["embed"], tokens, dtype=dt_)
     positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
     shared = params["shared"]
@@ -298,9 +307,9 @@ def decode_step(params, state, batch, cfg: ModelConfig):
         h = rms_norm(x, shared["attn_norm"], cfg.norm_eps)
         ap = AttnParams(shared["wq"], shared["wk"], shared["wv"], shared["wo"])
         q, k_new, v_new = qkv_project(h, ap, positions, cfg)
-        kc = update_kv_cache(kc, k_new, pos)
-        vc = update_kv_cache(vc, v_new, pos)
-        o = chunked_decode_attention(q, kc, vc, positions)
+        kc = update_kv_cache(kc, k_new, pos, codebook=cb)
+        vc = update_kv_cache(vc, v_new, pos, codebook=cb)
+        o = chunked_decode_attention(q, kc, vc, positions, codebook=cb)
         x = x + linear(o, shared["wo"], "btnh,nhd->btd")
         h = rms_norm(x, shared["mlp_norm"], cfg.norm_eps)
         x = x + swiglu(h, MlpParams(shared["w_gate"], shared["w_up"],
@@ -326,7 +335,11 @@ def decode_step(params, state, batch, cfg: ModelConfig):
         group_body, x, (params["mamba"], conv_s, ssm_s, k_s, v_s))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = linear(x, params["unembed"], "btd,dv->btv")
-    new_state = {"conv": conv, "ssm": ssm, "k0": k, "v0": v, "pos": pos + adv}
+    new_state = {"conv": conv, "ssm": ssm, "pos": pos + adv}
+    if cb is None:
+        new_state.update(k0=k, v0=v)
+    else:
+        new_state.update(k0=k.codes, k0s=k.scales, v0=v.codes, v0s=v.scales)
     return logits.astype(jnp.float32), new_state
 
 

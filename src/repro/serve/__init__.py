@@ -80,11 +80,37 @@ Components
     26/4 layers; measured 0.23× uniform at the smoke benchmark's
     kv_len=256).
 
+    The cache *contents* quantise too (``cfg.kv_format``): each cache
+    group stores block-scaled codebook rows instead of dense activations
+    — uint8 codes (``k{g}``/``v{g}``, nibble-packed pairwise along the
+    head dim for q4) plus one f32 absmax scale per (token, head) row
+    (``k{g}s``/``v{g}s``, scale block = head_dim) — the paper's weight
+    formats applied to the decode-time KV stream. Writes quantise fresh
+    rows inside the jitted step (``layers.update_kv_cache`` on a
+    ``QuantisedKV`` stack); reads stream codes straight through the fused
+    ``kernels.decode_attention`` flash-decode kernel (dequantise in VMEM
+    after the HBM read, identical ring/window/causal mask semantics —
+    q8 cuts the decode HBM stream ~3.8× vs f32, q4 ~7×, at 0.27×/0.14×
+    resident bytes). Every row is self-contained, so ring wraps, ragged
+    chunk padding, slot resets (a zero scale dequantises to the dense
+    wipe) and PrefixPool forks (``CacheSpec.state_keys`` enumerates the
+    scale entries) work unchanged. ``kv_format`` is per group
+    (``"q8"``/``"q4"`` broadcast, or a comma list — whisper's
+    cross-attention KV always stays dense), chosen by hand or by the
+    Fisher machinery: ``core.fisher.estimate_kv_fisher`` scores each
+    group's cache rows by the paper's Eq. 5 sensitivity and
+    ``core.allocation.allocate_kv_formats`` demotes least-sensitive
+    groups first under a resident-byte budget (``launch.serve
+    --kv-format auto --kv-budget-bytes N``). The kill-switch is
+    ``ServeEngine(quantised_cache=False)``: the engine drops
+    ``cfg.kv_format`` before any state is built and reproduces the dense
+    path bit-for-bit.
+
     ``ServeEngine.weight_bytes()`` reports resident bytes broken out as
     codes / scales / codebooks / dense (comparable across architectures);
     ``ServeEngine.cache_bytes()`` reports the decode-cache side — per
-    cache group (windowed vs global) against the uniform full-length
-    baseline. ``benchmarks/serve_packed.py`` measures tokens/s, weight
+    cache group (windowed vs global, with the code/scale byte split and
+    per-group format) against the uniform full-length dense baseline. ``benchmarks/serve_packed.py`` measures tokens/s, weight
     bytes and cache bytes per family (``--arch`` selects) and emits the
     machine-readable ``BENCH_serve.json`` perf record with per-family
     resident ratios. Measured (babsmax64:n4, packed vs the f32 master):

@@ -35,6 +35,24 @@ The same geometry with ``windowed=False`` allocates every group at the
 full length: the masked-full-cache baseline the ring path must match
 bit-for-bit on greedy tokens (and the pre-ring layout, kept as a
 kill-switch via ``ServeEngine(windowed_cache=False)``).
+
+Quantised cache formats (PR 10)
+-------------------------------
+Each group additionally carries a storage ``fmt``:
+
+* ``"f32"`` — dense rows at the spec dtype (the bit-exact baseline);
+* ``"q8"`` / ``"q4"`` — block-scaled codebook storage via the
+  ``kernels/block_quant`` machinery: one absmax scale per **(token, head)**
+  row (scale block = ``head_dim``), uint8 codes into a uniform symmetric
+  codebook (256 / 16 points). ``q4`` nibble-packs code pairs along the
+  head dim (``hd // 2`` bytes per row), so a row is self-contained and
+  ring writes never read-modify-write.
+
+A quantised group's state entries are ``k{g}``/``v{g}`` (uint8 codes) plus
+``k{g}s``/``v{g}s`` (float32 scales, trailing dim 1); ``state_keys``
+enumerates all of them, so the shared-prefix fork (``PrefixPool``) and the
+reset wipe copy/zero quantised rows with no special cases (a zero scale
+dequantises to exactly 0.0, matching a wiped dense row).
 """
 from __future__ import annotations
 
@@ -43,6 +61,61 @@ from typing import Dict, List, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+# ---------------------------------------------------------------------------
+# KV storage formats
+# ---------------------------------------------------------------------------
+
+KV_FORMATS = ("f32", "q8", "q4")
+_KV_BITS = {"f32": 0, "q8": 8, "q4": 4}
+
+
+def kv_bits(fmt: str) -> int:
+    """Code width of a KV format (0 = dense)."""
+    return _KV_BITS[fmt]
+
+
+def kv_codebook(fmt: str):
+    """The uniform symmetric codebook a quantised KV format dequantises
+    through: ``linspace(-1, 1, 2**bits)`` (float32). The block-absmax
+    scale normalises each (token, head) row into [-1, 1], so the uniform
+    grid is the paper's block-scaled integer format at that width."""
+    bits = kv_bits(fmt)
+    if not bits:
+        raise ValueError(f"dense format {fmt!r} has no codebook")
+    return jnp.linspace(-1.0, 1.0, 2 ** bits, dtype=jnp.float32)
+
+
+def parse_kv_formats(formats, n_groups: int, head_dim: int
+                     ) -> Tuple[str, ...]:
+    """Normalise a KV-format request to one format per cache group.
+
+    ``formats`` may be None/"" (all dense), a single format token
+    (broadcast), a comma-separated string, or a sequence — per group, in
+    group-index order. ``"auto"`` must be resolved to explicit formats
+    (Fisher allocation, see ``core.allocation.allocate_kv_formats``)
+    before reaching the cache geometry."""
+    if formats is None or formats == "":
+        return ("f32",) * n_groups
+    if isinstance(formats, str):
+        toks = [t.strip() for t in formats.split(",") if t.strip()]
+    else:
+        toks = [str(t) for t in formats]
+    if len(toks) == 1:
+        toks = toks * n_groups
+    if len(toks) != n_groups:
+        raise ValueError(
+            f"kv_format {formats!r}: got {len(toks)} formats for "
+            f"{n_groups} cache groups")
+    for t in toks:
+        if t not in KV_FORMATS:
+            raise ValueError(f"unknown kv format {t!r} (expected one of "
+                             f"{KV_FORMATS}, or 'auto' resolved upstream)")
+        if t == "q4" and head_dim % 2:
+            raise ValueError(
+                f"q4 nibble-packs code pairs along head_dim, which must be "
+                f"even (got {head_dim})")
+    return tuple(toks)
 
 
 def layer_groups(windows) -> Tuple[Tuple[int, Tuple[int, ...]], ...]:
@@ -67,11 +140,16 @@ class CacheGroup:
     window: int               # sliding-window size; 0 = global attention
     layers: Tuple[int, ...]   # absolute layer indices in stack order
     length: int               # allocated kv slots per layer
+    fmt: str = "f32"          # storage format: f32 | q8 | q4
 
     @property
     def ring(self) -> bool:
         """Windowed groups write at ``pos % length`` (ring buffer)."""
         return self.window > 0
+
+    @property
+    def quantised(self) -> bool:
+        return self.fmt != "f32"
 
     @property
     def k_key(self) -> str:
@@ -80,6 +158,23 @@ class CacheGroup:
     @property
     def v_key(self) -> str:
         return f"v{self.index}"
+
+    @property
+    def k_scale_key(self) -> str:
+        return f"k{self.index}s"
+
+    @property
+    def v_scale_key(self) -> str:
+        return f"v{self.index}s"
+
+    @property
+    def group_state_keys(self) -> Tuple[str, ...]:
+        """The decode-state keys this group owns: codes (or dense rows)
+        always; per-row scales when quantised."""
+        if self.quantised:
+            return (self.k_key, self.k_scale_key,
+                    self.v_key, self.v_scale_key)
+        return (self.k_key, self.v_key)
 
 
 @dataclass(frozen=True)
@@ -102,17 +197,28 @@ class CacheSpec:
     head_axis: str = "kv_heads"
 
     def state_specs(self) -> dict:
-        """``{k{g}: ParamSpec, v{g}: ParamSpec}`` per group — the grouped
-        decode-state entries (``pos`` and any non-KV state stay with the
-        family)."""
+        """Grouped decode-state entries (``pos`` and any non-KV state stay
+        with the family): per group, ``k{g}``/``v{g}`` — dense rows at the
+        spec dtype, or uint8 codes for quantised formats (``hd // 2`` wide
+        for nibble-packed q4) — plus float32 ``k{g}s``/``v{g}s`` absmax
+        scales (one per (token, head) row) when quantised."""
         from repro.models.api import ParamSpec
         specs = {}
         for g in self.groups:
-            shape = (len(g.layers), self.batch, g.length, self.kv_heads,
-                     self.head_dim)
+            lead = (len(g.layers), self.batch, g.length, self.kv_heads)
             axes = (self.layer_axis, "batch", "seq_kv", self.head_axis, None)
-            specs[g.k_key] = ParamSpec(shape, axes, self.dtype)
-            specs[g.v_key] = ParamSpec(shape, axes, self.dtype)
+            if g.quantised:
+                hdc = self.head_dim // 2 if g.fmt == "q4" else self.head_dim
+                code = ParamSpec(lead + (hdc,), axes, "uint8")
+                scale = ParamSpec(lead + (1,), axes, "float32")
+                specs[g.k_key] = code
+                specs[g.k_scale_key] = scale
+                specs[g.v_key] = code
+                specs[g.v_scale_key] = scale
+            else:
+                spec = ParamSpec(lead + (self.head_dim,), axes, self.dtype)
+                specs[g.k_key] = spec
+                specs[g.v_key] = spec
         return specs
 
     @property
@@ -120,27 +226,64 @@ class CacheSpec:
         return sum(len(g.layers) for g in self.groups)
 
     @property
+    def formats(self) -> Tuple[str, ...]:
+        return tuple(g.fmt for g in self.groups)
+
+    @property
+    def quantised(self) -> bool:
+        return any(g.quantised for g in self.groups)
+
+    @property
     def state_keys(self) -> Tuple[str, ...]:
-        """Every decode-state key this geometry owns (``k{g}``/``v{g}`` per
-        group) — the rows a shared-prefix fork must copy (ring and global
-        groups alike; see serve.scheduler.PrefixPool)."""
-        return tuple(k for g in self.groups for k in (g.k_key, g.v_key))
+        """Every decode-state key this geometry owns (codes + scales for
+        quantised groups) — the rows a shared-prefix fork must copy (ring
+        and global groups alike; see serve.scheduler.PrefixPool)."""
+        return tuple(k for g in self.groups for k in g.group_state_keys)
+
+    def group_row_bytes(self, fmt: str) -> int:
+        """Bytes one (token, head) K+V row pair costs under ``fmt``,
+        including per-row scales for quantised formats."""
+        if fmt == "f32":
+            return 2 * self.head_dim * jnp.dtype(self.dtype).itemsize
+        hdc = self.head_dim // 2 if fmt == "q4" else self.head_dim
+        return 2 * (hdc + 4)  # uint8 codes + one float32 scale, k and v
 
     def cache_bytes(self) -> dict:
-        """Byte accounting: per-group breakdown, grouped total (``kv``),
-        and the uniform full-length baseline (``uniform_kv``) the rolling
+        """Byte accounting: per-group breakdown (format, code/scale byte
+        split, dense-equivalent bytes), grouped total (``kv``) plus its
+        code/scale split, the same grouped geometry at the dense dtype
+        (``dense_kv`` — what quantisation is saving against), and the
+        uniform full-length dense baseline (``uniform_kv``) the rolling
         window is saving against."""
         item = jnp.dtype(self.dtype).itemsize
-        row = 2 * self.batch * self.kv_heads * self.head_dim * item  # k + v
+        dense_row = 2 * self.batch * self.kv_heads * self.head_dim * item
         per = []
-        kv = 0
+        kv = codes = scales = dense = 0
         for g in self.groups:
-            b = row * len(g.layers) * g.length
+            slots = len(g.layers) * g.length * self.batch * self.kv_heads
+            d = dense_row * len(g.layers) * g.length
+            if g.quantised:
+                hdc = self.head_dim // 2 if g.fmt == "q4" else self.head_dim
+                cb = 2 * slots * hdc   # uint8 codes, k + v
+                sb = 2 * slots * 4     # one float32 scale per row, k + v
+            else:
+                cb, sb = d, 0
+            b = cb + sb
             per.append({"window": g.window, "n_layers": len(g.layers),
-                        "length": g.length, "bytes": b})
+                        "length": g.length, "format": g.fmt, "bytes": b,
+                        "code_bytes": cb, "scale_bytes": sb,
+                        "dense_bytes": d,
+                        "ratio_vs_dense": round(b / d, 4) if d else 1.0})
             kv += b
-        uniform = row * self.n_layers * self.full_length
-        return {"kv": kv, "uniform_kv": uniform,
+            codes += cb
+            scales += sb
+            dense += d
+        uniform = dense_row * self.n_layers * self.full_length
+        return {"kv": kv, "code_bytes": codes, "scale_bytes": scales,
+                "dense_kv": dense,
+                "cache_ratio_vs_dense": round(kv / dense, 4) if dense
+                else 1.0,
+                "uniform_kv": uniform,
                 "cache_ratio_vs_uniform": round(kv / uniform, 4) if uniform
                 else 1.0,
                 "cache_groups": per}
@@ -149,20 +292,25 @@ class CacheSpec:
 def build_cache_spec(windows, batch: int, kv_len: int, *, slack: int = 0,
                      kv_heads: int, head_dim: int, dtype: str,
                      windowed: bool = True, layer_axis: str = "layers",
-                     head_axis: str = "kv_heads") -> CacheSpec:
+                     head_axis: str = "kv_heads",
+                     formats=None) -> CacheSpec:
     """Build a model's grouped cache geometry from its per-layer window
     pattern. Global groups (and every group when ``windowed=False`` — the
     masked-full-cache baseline) allocate ``kv_len + slack``; windowed
     groups allocate ``min(window, kv_len) + slack`` ring slots. ``slack``
     is the engine's chunk-write spill region (``prefill_chunk``): global
     caches never see a write past it, and it keeps ring clobbering outside
-    every window (``length ≥ window + chunk - 1``)."""
+    every window (``length ≥ window + chunk - 1``). ``formats`` selects
+    per-group storage (see :func:`parse_kv_formats`; default all
+    dense)."""
     full = kv_len + slack
+    grouped = layer_groups(windows)
+    fmts = parse_kv_formats(formats, len(grouped), head_dim)
     groups = []
-    for i, (w, layers) in enumerate(layer_groups(windows)):
+    for i, (w, layers) in enumerate(grouped):
         length = min(w, kv_len) + slack if (windowed and w > 0) else full
         groups.append(CacheGroup(index=i, window=w, layers=layers,
-                                 length=length))
+                                 length=length, fmt=fmts[i]))
     return CacheSpec(tuple(groups), batch, kv_heads, head_dim, dtype, full,
                      layer_axis, head_axis)
 
